@@ -1,0 +1,26 @@
+"""Shared benchmark harness bits."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2):
+    """us per call after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,32 @@
+"""§Roofline report — reads the dry-run JSONs and emits one row per
+(arch x shape x mesh): the three terms, bottleneck, useful-flops ratio."""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.common import emit
+
+
+def main():
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        emit("roofline_table", 0.0, "no dry-run records; run "
+             "python -m repro.launch.dryrun --all first")
+        return
+    for f in files:
+        r = json.load(open(f))
+        key = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") != "ok":
+            emit(key, 0.0, f"status={r['status']}")
+            continue
+        ro = r["roofline"]
+        emit(key, 0.0,
+             f"compute={ro['compute_s']*1e3:.1f}ms;"
+             f"memory={ro['memory_s']*1e3:.1f}ms;"
+             f"collective={ro['collective_s']*1e3:.1f}ms;"
+             f"bound={ro['bottleneck']};useful={ro['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  table1_convergence   Table I: final error, SSGD vs stale vs DC-S3GD
+  fig1_error_curves    Fig. 1: training-error curves per (N, batch)
+  eq13_14_timing       Eq. 13/14: step-time model (analytic + measured)
+  staleness_growth     §III-D.2: ||D_i|| vs ||w_PS − w_i|| growth in N
+  kernels_bench        Pallas kernel microbenchmarks vs XLA baselines
+  roofline_table       §Roofline rows from the dry-run artifacts
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import (eq13_14_timing, fig1_error_curves, kernels_bench,
+                            roofline_table, staleness_growth,
+                            table1_convergence)
+    print("name,us_per_call,derived")
+    for mod in (table1_convergence, fig1_error_curves, eq13_14_timing,
+                staleness_growth, kernels_bench, roofline_table):
+        mod.main()
+
+
+if __name__ == '__main__':
+    main()

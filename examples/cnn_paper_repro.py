@@ -1,0 +1,71 @@
+"""Paper-faithful reproduction example: the CNN experiment family.
+
+Trains the (reduced) ResNet with the exact hyper-parameter recipe of
+§IV-A — momentum SGD, theoretical LR = N*eta_sn, linear warm-up stopped
+early + linear decay applied to BOTH lr and weight decay (k = 2.3), no
+decay on rank-1 params — comparing SSGD / stale(λ0=0) / DC-S3GD.
+
+  PYTHONPATH=src python examples/cnn_paper_repro.py --workers 8
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dc_s3gd, ssgd
+from repro.core.types import DCS3GDConfig
+from repro.data import SyntheticImageDataset, worker_batches
+from repro.models.cnn import cnn_loss_fn, init_resnet, resnet_apply, top1_error
+from repro.optim.schedules import theoretical_lr
+
+
+def train(algo: str, n_workers: int, steps: int, eta_sn: float = 0.05):
+    params = init_resnet(jax.random.PRNGKey(0), stages=(1, 1), width=8,
+                         n_classes=8)
+    loss_fn = cnn_loss_fn(resnet_apply)
+    ds = SyntheticImageDataset(n_classes=8, image_size=16, seed=0, noise=0.4)
+    cfg = DCS3GDConfig(
+        learning_rate=theoretical_lr(eta_sn, n_workers),  # Eq. 16
+        momentum=0.9,
+        lambda0=0.0 if algo == "stale" else 0.2,
+        weight_decay=1e-4, weight_decay_k=2.3,            # §IV-A
+        warmup_steps=max(steps // 6, 1),                  # early-stopped warmup
+        total_steps=steps)
+    if algo == "ssgd":
+        state = ssgd.init(params, cfg)
+        step = jax.jit(lambda s, b: ssgd.ssgd_step(s, b, loss_fn=loss_fn,
+                                                   cfg=cfg))
+    else:
+        state = dc_s3gd.init(params, n_workers, cfg)
+        step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
+            s, b, loss_fn=loss_fn, cfg=cfg))
+    for t in range(steps):
+        state, m = step(state, worker_batches(ds, t, n_workers, 16))
+    final = state.params if algo == "ssgd" else dc_s3gd.average_params(state)
+    errs = [float(top1_error(resnet_apply, final, ds.batch(10_000 + i, 0, 64)))
+            for i in range(4)]
+    return float(m["loss"]), sum(errs) / len(errs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    print(f"[cnn_repro] ResNet (reduced), N={args.workers} workers, "
+          f"{args.steps} steps — paper Table I analogue")
+    print(f"{'algo':10s} {'train_loss':>11s} {'val_top1_err':>13s}")
+    for algo in ("ssgd", "stale", "dc_s3gd"):
+        loss, err = train(algo, args.workers, args.steps)
+        print(f"{algo:10s} {loss:11.4f} {err:13.3f}")
+    print("expected ordering: dc_s3gd ~ ssgd <= stale "
+          "(the correction recovers the synchronous trajectory)")
+
+
+if __name__ == "__main__":
+    main()

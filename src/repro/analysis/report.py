@@ -1,0 +1,69 @@
+"""Render EXPERIMENTS.md sections from the dry-run JSON artifacts.
+
+  PYTHONPATH=src python -m repro.analysis.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+from collections import defaultdict
+
+
+def load(mesh: str):
+    out = {}
+    for f in sorted(glob.glob(f"experiments/dryrun/*__{mesh}__*.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_mem(b):
+    return "-" if b is None else f"{b/2**30:.1f}"
+
+
+def roofline_table(mesh: str) -> str:
+    rows = load(mesh)
+    lines = [
+        f"### Mesh `{mesh}` "
+        f"({'512 chips (2,16,16)' if mesh == 'multipod' else '256 chips (16,16)'})",
+        "",
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | useful-FLOPs | temp GiB/dev | compile s |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for (arch, shape), r in sorted(rows.items()):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | *skipped:"
+                         f" {r['reason'][:60]}…* | — | — | — |")
+            continue
+        ro = r["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {ro['compute_s']*1e3:.1f} | "
+            f"{ro['memory_s']*1e3:.1f} | {ro['collective_s']*1e3:.1f} | "
+            f"**{ro['bottleneck']}** | {ro['useful_flops_ratio']:.2f} | "
+            f"{fmt_mem(r['memory']['temp_bytes'])} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(mesh: str) -> str:
+    rows = load(mesh)
+    ok = sum(1 for r in rows.values() if r["status"] == "ok")
+    sk = sum(1 for r in rows.values() if r["status"] == "skipped")
+    by_bound = defaultdict(int)
+    for r in rows.values():
+        if r["status"] == "ok":
+            by_bound[r["roofline"]["bottleneck"]] += 1
+    return (f"mesh `{mesh}`: {ok} lower+compile OK, {sk} noted skips; "
+            f"bottleneck split: {dict(by_bound)}")
+
+
+def main():
+    for mesh in ("pod", "multipod"):
+        print(dryrun_summary(mesh))
+        print()
+        print(roofline_table(mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import restore_pytree, save_pytree
+
+__all__ = ["restore_pytree", "save_pytree"]

@@ -1,0 +1,70 @@
+"""Assigned-architecture registry.
+
+Every config module exposes ``CONFIG`` (the exact assigned full-size config,
+with its source citation) and the registry offers ``reduced(cfg)`` smoke
+variants (2 layers, d_model <= 512, <= 4 experts) for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core.types import ModelConfig
+
+from repro.configs import (falcon_mamba_7b, granite_20b, minicpm3_4b,
+                           olmoe_1b_7b, phi35_moe_42b, qwen2_vl_7b,
+                           qwen3_0_6b, recurrentgemma_9b, stablelm_3b,
+                           whisper_large_v3)
+
+ARCHS: Dict[str, ModelConfig] = {
+    c.CONFIG.name: c.CONFIG
+    for c in (whisper_large_v3, recurrentgemma_9b, qwen2_vl_7b, granite_20b,
+              qwen3_0_6b, minicpm3_4b, stablelm_3b, olmoe_1b_7b,
+              falcon_mamba_7b, phi35_moe_42b)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Smoke-test variant of the same family: 2 layers, d_model<=512,
+    <=4 experts, small vocab."""
+    kw = dict(
+        name=cfg.name + "-smoke",
+        n_layers=2,
+        d_model=min(cfg.d_model, 256),
+        n_heads=4,
+        n_kv_heads=(min(max(cfg.n_kv_heads * 4 // cfg.n_heads, 1), 4)
+                    if cfg.n_heads else 0),
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        head_dim=64,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4,
+                                        top_k=min(cfg.moe.top_k, 2),
+                                        d_ff_expert=128)
+    if cfg.rglru is not None:
+        kw["rglru"] = dataclasses.replace(cfg.rglru, lru_width=256,
+                                          attention_window=64)
+        kw["n_layers"] = 4  # keep a full (rec, rec, attn) unit + remainder
+    if cfg.mla is not None:
+        kw["mla"] = dataclasses.replace(cfg.mla, q_lora_rank=64,
+                                        kv_lora_rank=32, qk_nope_head_dim=32,
+                                        qk_rope_head_dim=16, v_head_dim=32)
+        kw["head_dim"] = 0
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, n_layers=2,
+                                            n_frames=32)
+    if cfg.vlm is not None:
+        kw["vlm"] = dataclasses.replace(cfg.vlm, n_patches=8,
+                                        mrope_sections=(8, 12, 12))
+    if cfg.ssm is not None:
+        kw["ssm"] = cfg.ssm
+    kw["param_dtype"] = "float32"
+    kw["compute_dtype"] = "float32"
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,53 @@
+"""Synchronous SGD baseline (paper §II-A "decentralized synchronous").
+
+Identical weights on every worker; the gradient all-reduce is on the
+critical path (the update depends on *this* step's gradients), so the step
+time is t_C + t_ARed (paper Eq. 13) — the thing DC-S3GD removes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dc_s3gd import schedules
+from repro.core.types import DCS3GDConfig
+from repro.optim.local import init_local_state, local_update
+
+PyTree = Any
+
+
+class SSGDState(NamedTuple):
+    params: PyTree   # replicated (no worker axis)
+    opt: PyTree
+    step: jnp.ndarray
+
+
+def init(params: PyTree, cfg: DCS3GDConfig) -> SSGDState:
+    return SSGDState(params, init_local_state(params, cfg.local_optimizer),
+                     jnp.zeros((), jnp.int32))
+
+
+def ssgd_step(state: SSGDState, batch: PyTree, *,
+              loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+              cfg: DCS3GDConfig) -> Tuple[SSGDState, dict]:
+    """``batch`` leaves are (W, per_worker_batch, ...) like DC-S3GD, but
+    params are shared: grads are averaged over the worker axis *before* the
+    update (the blocking all-reduce)."""
+    lr, wd = schedules(state.step, cfg)
+    vg = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))
+    loss, grads = vg(state.params, batch)
+    # blocking all-reduce: mean over workers — on the critical path
+    grads = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0),
+                         grads)
+    upd = local_update(cfg.local_optimizer)
+    delta, opt = upd(grads, state.opt, state.params, lr=lr,
+                     momentum=cfg.momentum, weight_decay=wd,
+                     nesterov=cfg.nesterov)
+    new_params = jax.tree.map(
+        lambda w, dw: (w.astype(jnp.float32)
+                       + dw.astype(jnp.float32)).astype(w.dtype),
+        state.params, delta)
+    return (SSGDState(new_params, opt, state.step + 1),
+            {"loss": jnp.mean(loss), "lr": lr, "wd": wd})

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticImageDataset, SyntheticLMDataset,
+                                 worker_batches)
+
+__all__ = ["SyntheticImageDataset", "SyntheticLMDataset", "worker_batches"]

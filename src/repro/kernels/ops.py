@@ -1,0 +1,86 @@
+"""jit'd pytree-level wrappers around the Pallas kernels.
+
+``dc_s3gd_step_fused`` plugs these into the core algorithm: per-leaf
+flatten -> pad to (ROWS x 128) tiles -> kernel -> unpad/reshape.  On CPU the
+kernels run with ``interpret=True`` (Python-level execution of the kernel
+body); on TPU the same code compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dc_update as K
+
+PyTree = Any
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _to_tiles(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % K.BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, K.LANES), n
+
+
+def _from_tiles(t: jnp.ndarray, n: int, shape, dtype) -> jnp.ndarray:
+    return t.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def dc_norms_tree(grads: PyTree, distance: PyTree, *, interpret=None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Eq. 17 norms over a whole pytree: returns (‖g‖², ‖g²D‖²)."""
+    interpret = _is_cpu() if interpret is None else interpret
+    gsq = jnp.zeros((), jnp.float32)
+    csq = jnp.zeros((), jnp.float32)
+    for g, d in zip(jax.tree.leaves(grads), jax.tree.leaves(distance)):
+        g2, _ = _to_tiles(g.astype(jnp.float32))
+        d2, _ = _to_tiles(d.astype(jnp.float32))
+        a, b = K.dc_norms(g2, d2, interpret=interpret)
+        gsq = gsq + a
+        csq = csq + b
+    return gsq, csq
+
+
+def dc_fused_update_tree(grads: PyTree, distance: PyTree, momentum: PyTree,
+                         params: PyTree, *, lam, mu, eta, wd,
+                         interpret=None) -> Tuple[PyTree, PyTree, PyTree]:
+    """Fused correction+momentum+Eq.12 over a pytree.
+
+    Weight decay is masked to rank>1 leaves (paper: no decay on norm-layer
+    params).  Returns (new_params, new_momentum, delta)."""
+    interpret = _is_cpu() if interpret is None else interpret
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_d = jax.tree.leaves(distance)
+    leaves_m = jax.tree.leaves(momentum)
+    leaves_w = jax.tree.leaves(params)
+    out_w, out_m, out_delta = [], [], []
+    for g, d, m, w in zip(leaves_g, leaves_d, leaves_m, leaves_w):
+        g2, n = _to_tiles(g.astype(jnp.float32))
+        d2, _ = _to_tiles(d.astype(jnp.float32))
+        m2, _ = _to_tiles(m.astype(jnp.float32))
+        w2, _ = _to_tiles(w)
+        wd_leaf = wd if w.ndim > 1 else jnp.zeros_like(jnp.asarray(wd))
+        wn, mn, dn = K.dc_fused_update(g2, d2, m2, w2, lam=lam, mu=mu,
+                                       eta=eta, wd=wd_leaf,
+                                       interpret=interpret)
+        out_w.append(_from_tiles(wn, n, w.shape, w.dtype))
+        out_m.append(_from_tiles(mn, n, m.shape, jnp.float32))
+        out_delta.append(_from_tiles(dn, n, g.shape, jnp.float32))
+    un = functools.partial(jax.tree_util.tree_unflatten, treedef)
+    return un(out_w), un(out_m), un(out_delta)
+
+
+def dc_lambda(gsq: jnp.ndarray, csq: jnp.ndarray, lambda0: float
+              ) -> jnp.ndarray:
+    """λ_i = λ0·‖g‖/‖c‖ from the fused norms (Eq. 17)."""
+    cn = jnp.sqrt(csq)
+    return jnp.where(cn > 1e-30, lambda0 * jnp.sqrt(gsq) / (cn + 1e-30), 0.0)

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match to ~1e-6 (f32).  Tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-ref.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dc_norms_ref(g: jnp.ndarray, d: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(‖g‖², ‖g⊙g⊙D‖²) — the two reductions of Eq. 17."""
+    g32 = g.astype(jnp.float32)
+    c = g32 * g32 * d.astype(jnp.float32)
+    return jnp.sum(g32 * g32), jnp.sum(c * c)
+
+
+def dc_fused_update_ref(g, d, m, w, *, lam, mu, eta, wd, decay_mask: bool
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused DC-S3GD tail (Eq. 10 + 11 + 12) for one tensor:
+
+        g̃  = g + λ·g⊙g⊙D
+        gd = g̃ + wd·w                       (decoupled weight decay)
+        m' = μ·m + gd
+        Δw = −η·m'
+        w' = w + D + Δw
+
+    Returns (w', m', Δw).  All math f32; w' cast back to w.dtype.
+    """
+    g32 = g.astype(jnp.float32)
+    d32 = d.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    g_t = g32 + lam * (g32 * g32 * d32)
+    if decay_mask:
+        g_t = g_t + wd * w32
+    m_new = mu * m.astype(jnp.float32) + g_t
+    delta = -eta * m_new
+    w_new = (w32 + d32 + delta).astype(w.dtype)
+    return w_new, m_new, delta
+
+
+def decode_attention_ref(q, k, v, valid_len) -> jnp.ndarray:
+    """One-token GQA decode attention.
+
+    q: (B, KV, G, hd); k/v: (B, S, KV, hd); valid_len: scalar — positions
+    >= valid_len are masked.  Returns (B, KV, G, hd) f32."""
+    S = k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S) < valid_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+
+
+def ssm_scan_ref(a_log, dt, dtx, b, c):
+    """Naive sequential oracle for `repro.kernels.ssm_scan.ssm_scan`."""
+    import jax
+
+    A = -jnp.exp(a_log.astype(jnp.float32))            # (E, N)
+    B_, S, E = dt.shape
+    N = a_log.shape[-1]
+
+    def step(h, xs):
+        dt_t, dtx_t, b_t, c_t = xs                     # (B,E),(B,E),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None].astype(jnp.float32) * A)
+        h = dA * h + dtx_t[..., None].astype(jnp.float32) * \
+            b_t[:, None, :].astype(jnp.float32)
+        y = jnp.sum(h * c_t[:, None, :].astype(jnp.float32), axis=-1)
+        return h, y
+
+    h0 = jnp.zeros((B_, E, N), jnp.float32)
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(dtx, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last

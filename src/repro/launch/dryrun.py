@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place that forces 512
+# placeholder devices — tests/benches keep seeing the single real CPU.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.analysis import roofline as rl                    # noqa: E402
+from repro.configs import ARCHS, get_config                  # noqa: E402
+from repro.core import dc_s3gd, ssgd                         # noqa: E402
+from repro.core.types import DCS3GDConfig, INPUT_SHAPES      # noqa: E402
+from repro.launch import specs as S                          # noqa: E402
+from repro.launch.mesh import (make_production_mesh, n_workers,  # noqa: E402
+                               worker_axes)
+from repro.models.transformer import Model                   # noqa: E402
+from repro.parallel.sharding import (batch_specs, cache_specs,  # noqa: E402
+                                     param_specs, state_specs)
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, print memory/cost analysis, dump roofline JSON.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _maybe_axes(axes, size: int, mesh) -> tuple:
+    """Use the sharding axes only when the dim divides evenly (long_500k has
+    global_batch=1: batch must stay replicated)."""
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= mesh.shape[a]
+    return axes if size % total == 0 else None
+
+
+def build_train(cfg, shape, mesh, dc_cfg, algo: str):
+    """Returns (step_fn, abstract args, in/out shardings)."""
+    model = Model(cfg, remat=True,
+                  seq_parallel=bool(os.environ.get("DRYRUN_SEQ_PARALLEL")))
+    W = n_workers(mesh)
+    waxes = worker_axes(mesh)
+    wa = waxes if len(waxes) > 1 else waxes[0]
+    state = S.abstract_train_state(model, W, dc_cfg, algo)
+    batch = S.train_batch_specs(cfg, shape, W)
+    ms = mesh.shape["model"]
+
+    st_spec = state_specs(cfg, state, model_size=ms,
+                          worker_axes=wa if algo == "dc_s3gd" else None)
+    b_spec = batch_specs(cfg, batch, worker_axes=wa)
+
+    if algo == "dc_s3gd":
+        def step(st, bt):
+            return dc_s3gd.dc_s3gd_step(st, bt, loss_fn=model.loss, cfg=dc_cfg)
+    else:
+        def step(st, bt):
+            return ssgd.ssgd_step(st, bt, loss_fn=model.loss, cfg=dc_cfg)
+
+    in_sh = (_sharding_tree(mesh, st_spec), _sharding_tree(mesh, b_spec))
+    out_sh = (_sharding_tree(mesh, st_spec), None)
+    return step, (state, batch), in_sh, out_sh
+
+
+def build_prefill(cfg, shape, mesh):
+    model = Model(cfg, remat=True)
+    params = S.abstract_params(model)
+    batch = S.prefill_batch_specs(cfg, shape)
+    ms = mesh.shape["model"]
+    waxes = worker_axes(mesh)
+    da = waxes if len(waxes) > 1 else waxes[0]
+    da = _maybe_axes(da, shape.global_batch, mesh)
+
+    p_spec = param_specs(cfg, params, model_size=ms, worker_axes=None)
+    b_spec = batch_specs(cfg, batch, data_axes=da)
+
+    def step(p, b):
+        return model.prefill(p, b, cache_len=shape.seq_len)
+
+    in_sh = (_sharding_tree(mesh, p_spec), _sharding_tree(mesh, b_spec))
+    return step, (params, batch), in_sh, None
+
+
+def build_decode(cfg, shape, mesh):
+    model = Model(cfg, remat=False)
+    params = S.abstract_params(model)
+    cache = S.abstract_cache(model, shape)
+    batch = S.decode_batch_specs(cfg, shape)
+    ms = mesh.shape["model"]
+    waxes = worker_axes(mesh)
+    da = waxes if len(waxes) > 1 else waxes[0]
+    da = _maybe_axes(da, shape.global_batch, mesh)
+
+    p_spec = param_specs(cfg, params, model_size=ms, worker_axes=None)
+    c_spec = cache_specs(cfg, cache, model_size=ms, data_axes=da)
+    b_spec = batch_specs(cfg, batch, data_axes=da)
+
+    def step(p, c, b):
+        return model.decode_step(p, c, b)
+
+    in_sh = (_sharding_tree(mesh, p_spec), _sharding_tree(mesh, c_spec),
+             _sharding_tree(mesh, b_spec))
+    out_sh = (None, _sharding_tree(mesh, c_spec))
+    return step, (params, cache, batch), in_sh, out_sh
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, algo: str = "dc_s3gd",
+            out_dir: Path | None = None, verbose: bool = True) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = S.supports_shape(cfg0, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": why}
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {why}")
+        if out_dir is not None:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{arch}__{shape_name}__{mesh_kind}__{algo}.json"
+             ).write_text(json.dumps(rec, indent=2))
+        return rec
+
+    cfg = S.variant_for_shape(S.dryrun_model_config(cfg0), shape)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.devices.size
+    dc_cfg = DCS3GDConfig(total_steps=10_000, warmup_steps=1_500,
+                          microbatches=int(
+                              os.environ.get("DRYRUN_MICROBATCHES", "1")),
+                          comm_dtype=os.environ.get("DRYRUN_COMM_DTYPE",
+                                                    "float32"),
+                          state_dtype=os.environ.get("DRYRUN_STATE_DTYPE",
+                                                     "float32"))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step, args, in_sh, out_sh = build_train(cfg, shape, mesh, dc_cfg, algo)
+        donate = (0,)
+    elif shape.kind == "prefill":
+        step, args, in_sh, out_sh = build_prefill(cfg, shape, mesh)
+        donate = ()
+    else:
+        step, args, in_sh, out_sh = build_decode(cfg, shape, mesh)
+        donate = (1,)
+
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    if out_dir is not None and os.environ.get("DRYRUN_SAVE_HLO"):
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}__{algo}.hlo.txt"
+         ).write_text(hlo)
+    roof = rl.analyze(compiled, cfg, shape, n_chips, hlo_text=hlo)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "algo": algo,
+        "status": "ok",
+        "variant": cfg.name,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        m = rec["memory"]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_kind} ({algo}) OK "
+              f"compile={t_compile:.0f}s")
+        print(f"  mem/device: args={_gb(m['argument_bytes'])} "
+              f"temp={_gb(m['temp_bytes'])} peak={_gb(m['peak_bytes'])}")
+        print(f"  roofline: compute={roof.compute_s*1e3:.2f}ms "
+              f"memory={roof.memory_s*1e3:.2f}ms "
+              f"collective={roof.collective_s*1e3:.2f}ms "
+              f"-> {roof.bottleneck}-bound; useful-flops "
+              f"{roof.useful_flops_ratio:.2f}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fn = out_dir / f"{arch}__{shape_name}__{mesh_kind}__{algo}.json"
+        fn.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def _gb(x):
+    return "n/a" if x is None else f"{x/2**30:.2f}GiB"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("pod", "multipod"), default="pod")
+    ap.add_argument("--algo", choices=("dc_s3gd", "ssgd"), default="dc_s3gd")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) on the given mesh")
+    ap.add_argument("--out", type=Path, default=Path("experiments/dryrun"))
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in combos:
+        try:
+            run_one(a, s, args.mesh, algo=args.algo, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            failures.append((a, s, repr(e)))
+            print(f"[dryrun] FAIL {a} x {s} x {args.mesh}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES: {failures}")
+        sys.exit(1)
+    print(f"[dryrun] all {len(combos)} combos OK on mesh={args.mesh}")
+
+
+if __name__ == "__main__":
+    main()

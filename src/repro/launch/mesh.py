@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device;
+only the dry-run process sets ``xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod: ('data', 'model') = (16, 16) = 256 chips; two pods add a
+    leading 'pod' axis (DC-S3GD workers = pod x data = 32)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def worker_axes(mesh) -> tuple:
+    """The DC-S3GD worker axis = every non-'model' mesh axis."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_workers(mesh) -> int:
+    out = 1
+    for a in worker_axes(mesh):
+        out *= mesh.shape[a]
+    return out

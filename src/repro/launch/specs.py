@@ -1,0 +1,127 @@
+"""Abstract input/state builders for the dry-run.
+
+Everything here returns ``jax.ShapeDtypeStruct`` stand-ins (weak-type
+correct, shardable, no device allocation): the full-size configs are only
+ever lowered/compiled, never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import DCS3GDConfig, InputShape, ModelConfig
+from repro.models.transformer import Model
+
+PyTree = Any
+
+SDS = jax.ShapeDtypeStruct
+
+# sliding-window override used to make dense/MoE/VLM archs sub-quadratic for
+# the long_500k decode shape (Mistral-style ring cache; see DESIGN.md)
+LONG_CONTEXT_WINDOW = 4096
+
+
+def dryrun_model_config(cfg: ModelConfig, model_axis: int = 16) -> ModelConfig:
+    """bf16 params/compute for the production lowering; heads padded up to a
+    multiple of the model axis when they don't divide evenly (whisper 20->32,
+    qwen2-vl 28->32, minicpm3 40->48) so attention shards instead of
+    replicating."""
+    pad = 0
+    if cfg.n_heads and cfg.n_heads % model_axis:
+        pad = -(-cfg.n_heads // model_axis) * model_axis
+    return dataclasses.replace(cfg, param_dtype="bfloat16",
+                               compute_dtype="bfloat16", pad_heads_to=pad)
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k on full-attention archs switches to the sliding-window
+    variant (ring cache) — SSM/hybrid run natively."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.sliding_window == 0):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW,
+                                   name=cfg.name + "-sw4096")
+    return cfg
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family == "encdec":
+        return False, ("whisper decoder context is 448 positions; 524k-token "
+                       "decode is not meaningful for an enc-dec speech model "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+def _vlm_text_len(cfg: ModelConfig, seq: int) -> int:
+    return seq - cfg.vlm.n_patches
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_workers: int
+                      ) -> Dict[str, SDS]:
+    """Per-worker-stacked training batch: leaves (W, b, ...)."""
+    assert shape.global_batch % n_workers == 0, (shape, n_workers)
+    b = shape.global_batch // n_workers
+    S = shape.seq_len
+    W = n_workers
+    emb_dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        St = _vlm_text_len(cfg, S)
+        return {
+            "tokens": SDS((W, b, St), jnp.int32),
+            "labels": SDS((W, b, St), jnp.int32),
+            "patches": SDS((W, b, cfg.vlm.n_patches, cfg.d_model), emb_dtype),
+            "mrope_positions": SDS((W, 3, S), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        return {
+            "tokens": SDS((W, b, S), jnp.int32),
+            "labels": SDS((W, b, S), jnp.int32),
+            "frames": SDS((W, b, cfg.encoder.n_frames, cfg.d_model), emb_dtype),
+        }
+    return {
+        "tokens": SDS((W, b, S), jnp.int32),
+        "labels": SDS((W, b, S), jnp.int32),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    emb_dtype = jnp.dtype(cfg.compute_dtype)
+    out = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["tokens"] = SDS((B, _vlm_text_len(cfg, S)), jnp.int32)
+        out["patches"] = SDS((B, cfg.vlm.n_patches, cfg.d_model), emb_dtype)
+        out["mrope_positions"] = SDS((3, S), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = SDS((B, cfg.encoder.n_frames, cfg.d_model), emb_dtype)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    out = {"tokens": SDS((B, 1), jnp.int32), "pos": SDS((), jnp.int32)}
+    if cfg.family == "vlm":
+        out["mrope_positions"] = SDS((3, 1), jnp.int32)
+    return out
+
+
+def abstract_params(model: Model) -> PyTree:
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_train_state(model: Model, n_workers: int, dc_cfg: DCS3GDConfig,
+                         algo: str = "dc_s3gd") -> PyTree:
+    import repro.core.dc_s3gd as dc
+    import repro.core.ssgd as ssgd
+    params = abstract_params(model)
+    if algo == "dc_s3gd":
+        return jax.eval_shape(lambda p: dc.init(p, n_workers, dc_cfg), params)
+    return jax.eval_shape(lambda p: ssgd.init(p, dc_cfg), params)
+
+
+def abstract_cache(model: Model, shape: InputShape) -> PyTree:
+    cache_len = shape.seq_len
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, cache_len))

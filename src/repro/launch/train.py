@@ -1,0 +1,137 @@
+"""End-to-end training driver.
+
+Runs DC-S3GD (or the SSGD / uncompensated-stale baselines) for real steps on
+whatever devices exist — a ~100M-param config on CPU for the example run, or
+the production mesh on a pod (same code path; the mesh just grows).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduced --steps 200 --workers 4 --batch-per-worker 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.configs import ARCHS, get_config, reduced
+from repro.core import dc_s3gd, ssgd
+from repro.core.types import DCS3GDConfig
+from repro.data import SyntheticLMDataset, worker_batches
+from repro.models.transformer import Model
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--algo", choices=("dc_s3gd", "ssgd", "stale"),
+                    default="dc_s3gd",
+                    help="'stale' = DC-S3GD with lambda0=0 (no compensation)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--batch-per-worker", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--momentum", type=float, default=0.9)
+    ap.add_argument("--lambda0", type=float, default=0.2)
+    ap.add_argument("--warmup-frac", type=float, default=0.15)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", type=Path, default=None)
+    ap.add_argument("--resume", type=Path, default=None)
+    ap.add_argument("--metrics-out", type=Path, default=None)
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="use the fused Pallas update path")
+    return ap
+
+
+def run(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    model = Model(cfg, remat=False, moe_dense=args.reduced,
+                  q_chunk=64, kv_chunk=64, scan_chunk=64, loss_chunk=256)
+
+    dc_cfg = DCS3GDConfig(
+        learning_rate=args.lr, momentum=args.momentum,
+        lambda0=(0.0 if args.algo == "stale" else args.lambda0),
+        warmup_steps=max(int(args.warmup_frac * args.steps), 1),
+        total_steps=args.steps,
+    )
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq, seed=args.seed)
+
+    if args.algo in ("dc_s3gd", "stale"):
+        state = dc_s3gd.init(params, args.workers, dc_cfg)
+        step_fn = jax.jit(partial(dc_s3gd.dc_s3gd_step, loss_fn=model.loss,
+                                  cfg=dc_cfg,
+                                  use_fused_kernels=args.use_kernels),
+                          donate_argnums=0)
+    else:
+        state = ssgd.init(params, dc_cfg)
+        step_fn = jax.jit(partial(ssgd.ssgd_step, loss_fn=model.loss,
+                                  cfg=dc_cfg), donate_argnums=0)
+
+    start = 0
+    if args.resume and Path(args.resume).exists():
+        state = restore_pytree(args.resume, state)
+        start = int(state.step)
+        print(f"[train] resumed from {args.resume} at step {start}")
+
+    print(f"[train] {cfg.name} ({n_params/1e6:.1f}M params) algo={args.algo} "
+          f"W={args.workers} b={args.batch_per_worker} seq={args.seq}")
+
+    history = []
+    t0 = time.time()
+    for it in range(start, args.steps):
+        batch = worker_batches(data, it, args.workers, args.batch_per_worker)
+        state, metrics = step_fn(state, batch)
+        if it % args.log_every == 0 or it == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = it
+            m["wall_s"] = round(time.time() - t0, 1)
+            history.append(m)
+            extra = ""
+            if "distance_norm" in m:
+                extra = (f" |D|={m['distance_norm']:.2e} "
+                         f"lam={m.get('lambda', 0):.3f}")
+            print(f"[train] step {it:5d} loss={m['loss']:.4f} "
+                  f"lr={m['lr']:.4f}{extra}")
+    wall = time.time() - t0
+
+    if args.ckpt:
+        save_pytree(args.ckpt, state, step=args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+    result = {
+        "arch": cfg.name, "algo": args.algo, "steps": args.steps,
+        "workers": args.workers, "final_loss": history[-1]["loss"],
+        "wall_s": round(wall, 1),
+        "tokens_per_s": round(args.steps * args.workers
+                              * args.batch_per_worker * args.seq / wall, 1),
+        "history": history,
+    }
+    if args.metrics_out:
+        args.metrics_out.parent.mkdir(parents=True, exist_ok=True)
+        args.metrics_out.write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main(argv=None):
+    run(build_argparser().parse_args(argv))
+
+
+if __name__ == "__main__":
+    main()

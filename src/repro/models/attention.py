@@ -1,0 +1,329 @@
+"""Attention variants: GQA (+qk-norm, sliding/local window), MLA, cross-attn.
+
+Two execution paths per variant:
+  * ``*_train``  — full-sequence, memory-blocked (flash-style online softmax
+    over KV blocks inside a scan over Q chunks) so 32k prefill fits;
+  * ``*_decode`` — one new token against a KV cache (linear in cache length,
+    ring-buffer variant for sliding-window archs).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.models.layers import apply_mrope, apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool, dtype) -> dict:
+    ks = random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, n_heads, head_dim), dtype, in_axis_size=d),
+        "wk": dense_init(ks[1], (d, n_kv, head_dim), dtype, in_axis_size=d),
+        "wv": dense_init(ks[2], (d, n_kv, head_dim), dtype, in_axis_size=d),
+        "wo": dense_init(ks[3], (n_heads, head_dim, d), dtype,
+                         in_axis_size=n_heads * head_dim),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rmsnorm(head_dim, dtype)
+        p["k_norm"] = init_rmsnorm(head_dim, dtype)
+    return p
+
+
+def init_cross_attention(key, d: int, n_heads: int, head_dim: int, dtype) -> dict:
+    return init_attention(key, d, n_heads, n_heads, head_dim, False, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style blocked attention core (pure jnp; ref for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def _blocked_attention(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+                       q_chunk: int, kv_chunk: int) -> jnp.ndarray:
+    """q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd).  Online-softmax over KV
+    blocks, scanned over Q chunks.  Returns (B, Sq, KV, G, hd)."""
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    vd = v.shape[-1]  # value head dim may differ (MLA)
+    scale = hd ** -0.5
+
+    # pad sequence dims to chunk multiples
+    pq = (-Sq) % q_chunk
+    pk = (-Sk) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pk), constant_values=2**30)
+    nq, nk = (Sq + pq) // q_chunk, (Sk + pk) // kv_chunk
+
+    qs = q.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks_ = k.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nk, kv_chunk, KV, vd).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def per_q_chunk(_, xq):
+        qc, qpos = xq  # (B, qc, KV, G, hd), (qc,)
+
+        def per_kv_block(carry, xkv):
+            m, l, acc = carry
+            kc, vc, kpos = xkv
+            s = jnp.einsum("bqkgh,bckh->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            mask &= (kpos < 2**30)[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_kv_block, (m0, l0, a0), (ks_, vs, kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)  # (B, qc, KV, G, hd)
+
+    _, out = jax.lax.scan(per_q_chunk, None, (qs, qp))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + pq, KV, G, vd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def attention_train(params: dict, x: jnp.ndarray, positions: jnp.ndarray, *,
+                    rope_theta: float, causal: bool = True, window: int = 0,
+                    qk_norm: bool = False, norm_eps: float = 1e-6,
+                    mrope_positions: Optional[jnp.ndarray] = None,
+                    mrope_sections: Optional[Tuple[int, int, int]] = None,
+                    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    """x: (B, S, d); positions: (S,) absolute positions.  Returns (B, S, d).
+
+    ``kv_override`` supplies external (k, v) for cross-attention (already
+    projected).  ``mrope_positions`` (3, S) switches to multimodal RoPE.
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        k_pos = positions
+    else:
+        k, v = kv_override
+        k_pos = jnp.arange(k.shape[1])
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+        k = rmsnorm(params["k_norm"], k, norm_eps) if kv_override is None else k
+    if rope_theta > 0 and kv_override is None:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, rope_theta, mrope_sections)
+            k = apply_mrope(k, mrope_positions, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+
+    H, KV = q.shape[2], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, q.shape[-1])
+    out = _blocked_attention(qg, k, v, positions, k_pos, causal=causal,
+                             window=window, q_chunk=min(q_chunk, S),
+                             kv_chunk=min(kv_chunk, k.shape[1]))
+    out = out.reshape(B, S, H, -1)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# GQA decode with KV cache (full or ring-buffer/sliding-window)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int, dtype):
+    z = jnp.zeros((batch, cache_len, n_kv, head_dim), dtype=dtype)
+    return {"k": z, "v": z}
+
+
+def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray, *,
+                     rope_theta: float, window: int = 0, qk_norm: bool = False,
+                     norm_eps: float = 1e-6,
+                     mrope_positions: Optional[jnp.ndarray] = None,
+                     mrope_sections: Optional[Tuple[int, int, int]] = None,
+                     cross: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current position).
+
+    Cache keys are stored post-RoPE.  For ``window > 0`` the cache is a ring
+    buffer of size ``window`` (slot = pos % window) — memory O(window), not
+    O(sequence).  ``cross=True`` treats the cache as static (whisper
+    cross-attention: k/v precomputed from the encoder)."""
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+    if rope_theta > 0 and not cross:
+        if mrope_positions is not None:
+            q = apply_mrope(q, mrope_positions, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, pos[None], rope_theta)
+
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+        if qk_norm:
+            k_new = rmsnorm(params["k_norm"], k_new, norm_eps)
+        if rope_theta > 0:
+            if mrope_positions is not None:
+                k_new = apply_mrope(k_new, mrope_positions, rope_theta, mrope_sections)
+            else:
+                k_new = apply_rope(k_new, pos[None], rope_theta)
+        cache_len = cache["k"].shape[1]
+        slot = jnp.where(window > 0, pos % cache_len, pos)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cache = {"k": k_cache, "v": v_cache}
+        valid = jnp.arange(cache_len) <= pos  # ring: all valid once wrapped
+    else:
+        k_cache, v_cache = cache["k"], cache["v"]
+        valid = jnp.ones((k_cache.shape[1],), dtype=bool)
+
+    H, KV, hd = q.shape[2], k_cache.shape[2], q.shape[3]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, d: int, n_heads: int, mla_cfg, dtype) -> dict:
+    m = mla_cfg
+    ks = random.split(key, 8)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": init_rmsnorm(m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, n_heads, qk), dtype,
+                           in_axis_size=m.q_lora_rank),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[3], (d, m.qk_rope_head_dim), dtype),
+        "w_uk": dense_init(ks[4], (m.kv_lora_rank, n_heads, m.qk_nope_head_dim),
+                           dtype, in_axis_size=m.kv_lora_rank),
+        "w_uv": dense_init(ks[5], (m.kv_lora_rank, n_heads, m.v_head_dim),
+                           dtype, in_axis_size=m.kv_lora_rank),
+        "wo": dense_init(ks[6], (n_heads, m.v_head_dim, d), dtype,
+                         in_axis_size=n_heads * m.v_head_dim),
+    }
+
+
+def mla_train(params: dict, x: jnp.ndarray, positions: jnp.ndarray, *,
+              mla_cfg, rope_theta: float, norm_eps: float = 1e-6,
+              q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    m = mla_cfg
+    B, S, _ = x.shape
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"], norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], norm_eps)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions, rope_theta)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, params["w_uv"])
+
+    H = q.shape[2]
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # MHA (KV = H groups of 1)
+    qg = q_full[:, :, :, None, :]
+    out = _blocked_attention(qg, k_full, v, positions, positions, causal=True,
+                             window=0, q_chunk=min(q_chunk, S),
+                             kv_chunk=min(kv_chunk, S))
+    out = out.reshape(B, S, H, m.v_head_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def init_mla_cache(batch: int, cache_len: int, mla_cfg, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, mla_cfg.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, cache_len, mla_cfg.qk_rope_head_dim), dtype=dtype),
+    }
+
+
+def mla_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray, *,
+               mla_cfg, rope_theta: float, norm_eps: float = 1e-6
+               ) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed-weight MLA decode: scores and values are computed directly in
+    the compressed latent space, so per-step cost is O(S · kv_lora_rank · H)
+    instead of re-expanding the whole cache.  This is the TPU-friendly form —
+    two extra small matmuls per step instead of an S-sized expansion."""
+    m = mla_cfg
+    B = x.shape[0]
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"], norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"])[:, 0]  # (B,H,qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], pos[None], rope_theta)[:, 0]
+
+    ckv_t = rmsnorm(params["kv_norm"], x @ params["w_dkv"], norm_eps)[:, 0]
+    k_rope_t = apply_rope((x @ params["w_kr"])[:, :, None, :], pos[None],
+                          rope_theta)[:, 0, 0]
+
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_t[:, None].astype(cache["ckv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_t[:, None].astype(cache["k_rope"].dtype), (0, pos, 0))
+    cache = {"ckv": ckv, "k_rope": k_rope}
+    S = ckv.shape[1]
+    valid = jnp.arange(S) <= pos
+
+    # absorb W_uk into the query:  q_lat_h = q_nope @ W_uk^T  (per head)
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope, params["w_uk"])  # (B,H,ckv_rank)
+    s = jnp.einsum("bhr,bsr->bhs", q_abs, ckv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhk,bsk->bhs", q_rope, k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # values in latent space, then expand through W_uv
+    lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv.dtype), ckv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhr,rhk->bhk", lat, params["w_uv"])
+    out = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
+    return out, cache

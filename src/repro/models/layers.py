@@ -1,0 +1,186 @@
+"""Shared neural-net building blocks (pure JAX, functional).
+
+Parameters are nested dicts of ``jnp.ndarray``; every ``init_*`` function is
+traceable (usable under ``jax.eval_shape`` so the dry-run never allocates).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, in_axis_size: Optional[int] = None):
+    """LeCun-normal style init; fan-in is the product of all but the last dim
+    unless given explicitly."""
+    fan_in = in_axis_size
+    if fan_in is None:
+        fan_in = int(math.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: Tuple[int, int, int]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (..., S, H, head_dim); positions: (3, ..., S) — temporal/height/width
+    position ids.  ``sections`` split head_dim//2 frequencies into t/h/w
+    groups; each group rotates with its own position component.
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)  # (half,)
+    # pick the position component per frequency slot
+    comp = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (half,)
+    pos = jnp.take(positions.astype(jnp.float32), comp, axis=0)  # (half, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)  # (..., S, half)
+    angles = pos[..., None, :] * inv  # (..., S, 1, half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (n_pos, d)."""
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / max(d // 2 - 1, 1))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated / plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, gated: bool, dtype) -> dict:
+    ks = random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d, f), dtype),
+        "w_down": dense_init(ks[1], (f, d), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    act = act_fn(activation)
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# causal 1-d convolution (mamba / rg-lru temporal conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, bias: Optional[jnp.ndarray] = None
+                  ) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (B, S, C), w: (C, K). O(K) shifted adds —
+    plays nicely with GSPMD (no conv collectives) and with scan chunking."""
+    k = w.shape[-1]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = x if shift == 0 else jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * w[:, i]
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def causal_conv1d_update(conv_state: jnp.ndarray, x_t: jnp.ndarray, w: jnp.ndarray,
+                         bias: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step.  conv_state: (B, K-1, C) past inputs, x_t: (B, C).
+    Returns (y_t, new_conv_state)."""
+    k = w.shape[-1]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,ck->bc", window, w)
+    if bias is not None:
+        y = y + bias
+    return y, window[:, 1:] if k > 1 else conv_state

@@ -1,0 +1,96 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin fig. 2): two branches from the input —
+  x-branch: linear(d -> w) -> causal conv(4) -> RG-LRU recurrence
+  gate-branch: linear(d -> w) -> GeLU
+merged multiplicatively, then linear(w -> d).
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+  a_t = exp(c * softplus(Λ) * (-r_t))            # a = sigmoid(Λ)^(c·r)
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+Training uses the same chunked associative scan as the Mamba block (it is a
+diagonal linear recurrence); decode carries (conv_state, h).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.models.layers import causal_conv1d, causal_conv1d_update, dense_init
+from repro.models.ssm import _ssm_scan_chunked
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def init_rglru_block(key, d: int, cfg, dtype) -> dict:
+    w = cfg.lru_width or d
+    ks = random.split(key, 8)
+    # Λ init so that a ∈ [0.9, 0.999] at r=1 (Griffin appendix)
+    u = random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _C) - 1.0)  # softplus^-1(-log(u)/c)
+    return {
+        "w_x": dense_init(ks[0], (d, w), dtype),
+        "w_gate": dense_init(ks[1], (d, w), dtype),
+        "conv_w": (random.normal(ks[2], (w, cfg.conv_kernel)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(ks[3], (w, w), dtype),
+        "w_i": dense_init(ks[4], (w, w), dtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def _gates(params, xi):
+    r = jax.nn.sigmoid((xi @ params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xi @ params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xi.astype(jnp.float32)
+
+
+def rglru_forward(params: dict, x: jnp.ndarray, cfg, *, chunk: int = 256
+                  ) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    xi = x @ params["w_x"]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    xi = causal_conv1d(xi, params["conv_w"], params["conv_b"])
+
+    a, bx = _gates(params, xi)                 # (B, S, w) each, f32
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0)))
+    # reuse the (B,S,E,N) scan with N=1
+    hs, _ = _ssm_scan_chunked(a[..., None], bx[..., None],
+                              jnp.zeros((B, a.shape[-1], 1), jnp.float32), chunk)
+    h = hs[:, :S, :, 0].astype(x.dtype)
+    return (h * gate) @ params["w_out"]
+
+
+def init_rglru_state(batch: int, d: int, cfg, dtype):
+    w = cfg.lru_width or d
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype=dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(params: dict, state: dict, x: jnp.ndarray, cfg
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d) -> ((B, 1, d), new_state)."""
+    xt = x[:, 0]
+    xi = xt @ params["w_x"]
+    gate = jax.nn.gelu(xt @ params["w_gate"])
+    xi, conv_state = causal_conv1d_update(state["conv"], xi, params["conv_w"],
+                                          params["conv_b"])
+    a, bx = _gates(params, xi)
+    h = a * state["h"] + bx
+    out = ((h.astype(x.dtype) * gate) @ params["w_out"])[:, None]
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,199 @@
+"""Mamba-1 selective SSM block (falcon-mamba architecture).
+
+Training path uses a *chunked* linear-recurrence scan: sequential
+``lax.scan`` over chunks with an associative scan inside each chunk, and the
+chunk body wrapped in ``jax.checkpoint``.  This keeps the materialized state
+tensor at (B, chunk, E, N) instead of (B, S, E, N) — with the inner dim E
+sharded over the ``model`` axis the per-device working set stays in the
+hundreds of MB even at 32k prefill.
+
+Decode path is the O(1)-state recurrence (conv state + ssm state carried).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.models.layers import causal_conv1d, causal_conv1d_update, dense_init
+
+
+def dt_rank_of(d_model: int, cfg) -> int:
+    return cfg.dt_rank or -(-d_model // 16)
+
+
+def init_mamba(key, d: int, cfg, dtype) -> dict:
+    e = cfg.expand * d
+    n = cfg.state_dim
+    r = dt_rank_of(d, cfg)
+    ks = random.split(key, 8)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (e, 1))
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * e), dtype),              # x and z branches
+        "conv_w": (random.normal(ks[1], (e, cfg.conv_kernel)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((e,), dtype),
+        "w_x": dense_init(ks[2], (e, r + 2 * n), dtype),           # -> dt_low, B, C
+        "w_dt": dense_init(ks[3], (r, e), dtype),
+        "dt_bias": (random.uniform(ks[4], (e,), minval=-4.6, maxval=-2.3)
+                    ).astype(jnp.float32),                          # softplus^-1 of ~1e-2
+        "a_log": jnp.log(a),                                        # (e, n) f32
+        "d_skip": jnp.ones((e,), jnp.float32),
+        "w_out": dense_init(ks[5], (e, d), dtype),
+    }
+
+
+def _ssm_scan_chunked(dA, dBx, h0, chunk: int, C=None):
+    """Linear recurrence h_t = dA_t * h_{t-1} + dBx_t over axis 1.
+
+    dA, dBx: (B, S, E, N) — S must be a multiple of ``chunk``.
+
+    With ``C`` (B, S, N) given, the state is contracted against C *inside*
+    each chunk body and only y (B, S, E) is emitted — the (B, S, E, N)
+    state tensor never exists beyond one chunk.  This is the memory-roofline
+    fix found by the dry-run (falcon-mamba train_4k: the materialized state
+    was N=16x the activation size and dominated HBM traffic).
+    Returns (ys-or-hs, h_last).
+    """
+    B, S, E, N = dA.shape
+    nc = S // chunk
+    dA_c = dA.reshape(B, nc, chunk, E, N).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(B, nc, chunk, E, N).transpose(1, 0, 2, 3, 4)
+    C_c = None
+    if C is not None:
+        C_c = C.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    if C is None:
+        @jax.checkpoint
+        def chunk_body(h, xs):
+            a, b = xs  # (B, chunk, E, N)
+            a_acc, b_acc = jax.lax.associative_scan(combine, (a, b), axis=1)
+            hs = a_acc * h[:, None] + b_acc
+            return hs[:, -1], hs
+
+        h_last, hs = jax.lax.scan(chunk_body, h0, (dA_c, dBx_c))
+        hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, E, N)
+        return hs, h_last
+
+    @jax.checkpoint
+    def chunk_body_y(h, xs):
+        a, b, c = xs  # (B, chunk, E, N), c: (B, chunk, N)
+        a_acc, b_acc = jax.lax.associative_scan(combine, (a, b), axis=1)
+        hs = a_acc * h[:, None] + b_acc
+        y = jnp.einsum("bsen,bsn->bse", hs, c)
+        return hs[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_body_y, h0, (dA_c, dBx_c, C_c))
+    ys = ys.transpose(1, 0, 2, 3).reshape(B, S, E)
+    return ys, h_last
+
+
+def mamba_forward(params: dict, x: jnp.ndarray, cfg, *, chunk: int = 256,
+                  return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d) [, final ssm state (B, E, N)].
+
+    The discretized (B, S, E, N) tensors (dA, dBx, the running state) are
+    built and consumed *inside* each scan chunk, so the live working set is
+    (B, chunk, E, N) — N=16x smaller than materializing over the full
+    sequence (the dry-run's dominant memory-roofline term for the SSM)."""
+    B, S, d = x.shape
+    e = cfg.expand * d
+    n = cfg.state_dim
+    r = dt_rank_of(d, cfg)
+
+    xz = x @ params["w_in"]                       # (B, S, 2e)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = causal_conv1d(xi, params["conv_w"], params["conv_b"])
+    xi = jax.nn.silu(xi)
+
+    dbc = xi @ params["w_x"]                      # (B, S, r + 2n)
+    dt_low, Bmat, Cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus((dt_low @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])     # (B, S, e) f32
+    A = -jnp.exp(params["a_log"])                 # (e, n)
+    dtx = dt * xi.astype(jnp.float32)             # (B, S, e)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        # identity padding: dt=0 -> dA=1, dBx=0 (state unchanged past S)
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dtx = jnp.pad(dtx, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = (S + pad) // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, nc, chunk, t.shape[-1]).transpose(1, 0, 2, 3)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    @jax.checkpoint
+    def chunk_body(h, xs):
+        dt_c, dtx_c, b_c, c_c = xs  # (B, chunk, e), ..., (B, chunk, n)
+        dA = jnp.exp(dt_c[..., None] * A)                       # (B,c,e,n)
+        dBx = dtx_c[..., None] * b_c.astype(jnp.float32)[..., None, :]
+        a_acc, b_acc = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        hs = a_acc * h[:, None] + b_acc
+        y = jnp.einsum("bsen,bsn->bse", hs, c_c.astype(jnp.float32))
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, e, n), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        chunk_body, h0,
+        (to_chunks(dt), to_chunks(dtx), to_chunks(Bmat), to_chunks(Cmat)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S + pad, e)[:, :S]
+
+    y = y + params["d_skip"] * xi.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    if return_state:
+        return out, h_last
+    return out
+
+
+def init_mamba_state(batch: int, d: int, cfg, dtype):
+    e = cfg.expand * d
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, e), dtype=dtype),
+        "ssm": jnp.zeros((batch, e, cfg.state_dim), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, state: dict, x: jnp.ndarray, cfg
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """One-token step.  x: (B, 1, d).  Returns ((B, 1, d), new_state)."""
+    B, _, d = x.shape
+    n = cfg.state_dim
+    r = dt_rank_of(d, cfg)
+
+    xz = x[:, 0] @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_state = causal_conv1d_update(state["conv"], xi, params["conv_w"],
+                                          params["conv_b"])
+    xi = jax.nn.silu(xi)
+
+    dbc = xi @ params["w_x"]
+    dt_low, Bmat, Cmat = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus((dt_low @ params["w_dt"]).astype(jnp.float32)
+                         + params["dt_bias"])     # (B, e)
+    A = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt[..., None] * A)               # (B, e, n)
+    dBx = (dt * xi.astype(jnp.float32))[..., None] * Bmat.astype(jnp.float32)[:, None, :]
+    h = dA * state["ssm"] + dBx
+
+    y = jnp.einsum("ben,bn->be", h, Cmat.astype(jnp.float32))
+    y = y + params["d_skip"] * xi.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["w_out"])[:, None]
+    return out, {"conv": conv_state, "ssm": h}

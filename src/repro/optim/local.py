@@ -1,0 +1,103 @@
+"""Local optimizers U(g, eta, mu) used inside DC-S3GD / SSGD.
+
+The paper uses momentum SGD (with the decoupled, scheduled weight decay of
+§IV-A); LARS and Adam are the §V extensions.  All return the *update*
+``delta_w`` (to be added to the weights) plus the new optimizer slots, so
+they compose with the DC-S3GD step (Eq. 11: Δw_i = U(g̃_i, η, μ)).
+
+Weight-decay masking: norm/bias-like parameters (rank-1 leaves) are excluded,
+matching the paper ("weight decay was applied to all weights, with the
+exception of those belonging to batch normalization layers").
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _decay_mask(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.asarray(p.ndim > 1, jnp.float32), params)
+
+
+def init_local_state(params: PyTree, optimizer: str = "momentum") -> PyTree:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    if optimizer == "adam":
+        return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, zeros),
+                "t": jnp.zeros((), jnp.int32)}
+    return {"m": zeros}
+
+
+def momentum_update(grads: PyTree, state: PyTree, params: PyTree, *,
+                    lr, momentum: float, weight_decay, nesterov: bool = False
+                    ) -> Tuple[PyTree, PyTree]:
+    """Returns (delta_w, new_state).  ``lr``/``weight_decay`` may be traced
+    scalars (the paper schedules both)."""
+    mask = _decay_mask(params)
+
+    def upd(g, m, p, msk):
+        g32 = g.astype(jnp.float32) + weight_decay * msk * p.astype(jnp.float32)
+        m_new = momentum * m + g32
+        step_dir = g32 + momentum * m_new if nesterov else m_new
+        return (-lr * step_dir).astype(p.dtype), m_new
+
+    flat = jax.tree.map(upd, grads, state["m"], params, mask)
+    delta = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return delta, {"m": m_new}
+
+
+def lars_update(grads: PyTree, state: PyTree, params: PyTree, *,
+                lr, momentum: float, weight_decay, trust: float = 0.001,
+                **_) -> Tuple[PyTree, PyTree]:
+    """LARS (You et al. 2017) — paper §V suggested local optimizer."""
+    mask = _decay_mask(params)
+
+    def upd(g, m, p, msk):
+        g32 = g.astype(jnp.float32) + weight_decay * msk * p.astype(jnp.float32)
+        w_norm = jnp.linalg.norm(p.astype(jnp.float32))
+        g_norm = jnp.linalg.norm(g32)
+        ratio = jnp.where((w_norm > 0) & (g_norm > 0),
+                          trust * w_norm / (g_norm + 1e-9), 1.0)
+        m_new = momentum * m + ratio * g32
+        return (-lr * m_new).astype(p.dtype), m_new
+
+    flat = jax.tree.map(upd, grads, state["m"], params, mask)
+    delta = jax.tree.map(lambda t: t[0], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    m_new = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return delta, {"m": m_new}
+
+
+def adam_update(grads: PyTree, state: PyTree, params: PyTree, *,
+                lr, weight_decay, b1: float = 0.9, b2: float = 0.999,
+                eps: float = 1e-8, **_) -> Tuple[PyTree, PyTree]:
+    """AdamW-style local optimizer — paper §V suggested alternative."""
+    mask = _decay_mask(params)
+    t = state["t"] + 1
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    def upd(g, m, v, p, msk):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        step = step + weight_decay * msk * p.astype(jnp.float32)
+        return (-lr * step).astype(p.dtype), m_new, v_new
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params, mask)
+    pick = lambda i: jax.tree.map(lambda t: t[i], flat,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+
+def local_update(name: str):
+    return {"momentum": momentum_update, "lars": lars_update,
+            "adam": adam_update}[name]

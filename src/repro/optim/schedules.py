@@ -1,0 +1,27 @@
+"""Iteration-dependent schedules (paper §IV-A).
+
+The paper uses a *linear warm-up* stopped at the observed training-error
+plateau (15–20 epochs) followed by a *linear decrease* to zero at
+``total_steps`` — applied to both the learning rate and (scaled by k=2.3)
+the weight decay.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_linear_decay(step, *, peak: float, warmup_steps: int,
+                               total_steps: int) -> jnp.ndarray:
+    """Paper's schedule.  Warm-up ends at ``warmup_steps`` having reached only
+    the *fraction of the theoretical peak* implied by the early stop (the
+    caller passes the already-scaled ``peak``); then linear decay to 0."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup_steps, 1)
+    decay_span = jnp.maximum(total_steps - warmup_steps, 1)
+    decay = peak * jnp.maximum(total_steps - step, 0.0) / decay_span
+    return jnp.where(step < warmup_steps, warm, decay)
+
+
+def theoretical_lr(eta_single_node: float, n_workers: int) -> float:
+    """Paper Eq. 16: eta_theo = N * eta_sn (linear scaling rule)."""
+    return eta_single_node * n_workers

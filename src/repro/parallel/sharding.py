@@ -1,0 +1,208 @@
+"""Partition rules: parameter/batch/cache pytrees -> PartitionSpec pytrees.
+
+Scheme (single pod): mesh ('data', 'model') = (16, 16); multi-pod adds a
+leading 'pod' axis that joins 'data' as the DC-S3GD worker axis.
+
+* Tensor parallelism over 'model': attention heads (when divisible — GSPMD
+  pads uneven head counts, but we fall back to replicated projections to
+  keep collectives predictable), FFN hidden dim, MoE experts, SSM/RG-LRU
+  inner dim, vocab dim of the unembedding.
+* DC-S3GD worker axis: leading dim of every state leaf, sharded over
+  ('pod', 'data') — one weight replica per data shard.
+* Activations: propagated by GSPMD from the parameter/input shardings
+  (Megatron-style shardings emerge from the einsum contractions).
+
+Rules are keyed on the parameter's dict-path name; ranks disambiguate
+collisions (dense ``w_up`` (d,f) vs MoE ``w_up`` (E,d,f)).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+
+PyTree = Any
+
+
+def _attn_shardable(n: int, model_size: int) -> bool:
+    return n > 0 and n % model_size == 0
+
+
+def _base_spec(name: str, parent: str, ndim: int, cfg: ModelConfig,
+               model_size: int) -> Tuple:
+    """Spec for the canonical (unstacked) parameter."""
+    m = "model"
+    heads_ok = _attn_shardable(cfg.eff_n_heads, model_size)
+    kv_ok = _attn_shardable(cfg.eff_n_kv_heads, model_size)
+
+    if name in ("scale", "bias", "conv_b", "dt_bias", "d_skip", "lam"):
+        # canonical rank 1; SSM/RG-LRU per-channel vectors shard over model
+        return (m,) if parent in ("mamba", "rglru") and name != "scale" \
+            else (None,)
+    if name == "tok":
+        # vocab-sharded: the token gather costs one activation all-reduce at
+        # the embedding, and activations come out *replicated* over 'model' —
+        # the Megatron pattern (sharding d instead propagates a d-sharded
+        # activation into every block and costs an all-reduce per projection).
+        return (m, None)
+    if name == "unembed":
+        return (None, m)                       # shard vocab: chunked xent
+    if name == "vision_proj":
+        return (None, m)
+    if name == "wq":
+        return (None, m, None) if heads_ok else (None, None, None)
+    if name in ("wk", "wv"):
+        return (None, m, None) if kv_ok else (None, None, None)
+    if name == "wo":
+        return (m, None, None) if heads_ok else (None, None, None)
+    if name in ("w_up", "w_gate"):
+        if parent == "moe":                    # (E, d, f): expert parallel
+            return (m, None, None)
+        return (None, m)                       # dense (d, f) / rglru (d, w)
+    if name == "w_down":
+        if parent == "moe":                    # (E, f, d)
+            return (m, None, None)
+        return (m, None)
+    if name == "router":
+        return (None, None)
+    # --- mamba ---
+    if name == "w_in":
+        return (None, m)
+    if name == "conv_w":
+        return (m, None)
+    if name == "w_x":
+        if parent == "rglru":                  # (d, w)
+            return (None, m)
+        return (m, None)                       # mamba (e, r+2n)
+    if name == "w_dt":
+        return (None, m)
+    if name == "a_log":
+        return (m, None)
+    if name == "w_out":
+        return (m, None)                       # (e|w, d)
+    # --- rglru ---
+    if name in ("w_a", "w_i"):
+        return (None, m)
+    # --- MLA ---
+    if name in ("w_dq", "w_dkv", "w_kr"):
+        return (None, None)
+    if name in ("w_uq", "w_uk", "w_uv"):
+        return (None, m, None) if heads_ok else (None, None, None)
+    raise ValueError(f"no partition rule for param {parent}/{name} "
+                     f"(ndim={ndim}) — add one to _base_spec")
+
+
+_PARENTS_OF_INTEREST = {"mamba", "rglru", "attn", "xattn", "moe", "mlp"}
+
+
+def _path_names(path) -> Tuple[str, str]:
+    keys = [getattr(k, "key", str(k)) for k in path]
+    name = keys[-1]
+    parent = next((k for k in reversed(keys[:-1])
+                   if k in _PARENTS_OF_INTEREST), "")
+    return name, parent
+
+
+def param_specs(cfg: ModelConfig, params: PyTree, *, model_size: int,
+                worker_axes: Optional[Tuple[str, ...]] = None) -> PyTree:
+    """Spec tree matching ``params`` (which may be abstract shapes).
+
+    ``worker_axes`` (e.g. ('pod', 'data')) marks a leading DC-S3GD worker
+    dim on every leaf.  Stacked stage dims (and any other extra leading
+    dims) get None."""
+    def spec_of(path, leaf):
+        name, parent = _path_names(path)
+        base = _base_spec(name, parent, leaf.ndim, cfg, model_size)
+        extra = leaf.ndim - len(base) - (1 if worker_axes else 0)
+        assert extra >= 0, (name, leaf.ndim, base)
+        lead = ((worker_axes,) if worker_axes else ()) + (None,) * extra
+        return P(*lead, *base)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def state_specs(cfg: ModelConfig, state: Any, *, model_size: int,
+                worker_axes: Tuple[str, ...]) -> Any:
+    """Specs for a DCS3GDState/SSGDState-like NamedTuple: params/opt/
+    delta_prev share the param layout (+ worker axis where present)."""
+    import repro.core.dc_s3gd as dc
+    import repro.core.ssgd as ssgd
+
+    if isinstance(state, dc.DCS3GDState):
+        ps = param_specs(cfg, state.params, model_size=model_size,
+                         worker_axes=worker_axes)
+        opt = _like_params(cfg, state.opt, model_size, worker_axes)
+        dp = param_specs(cfg, state.delta_prev, model_size=model_size,
+                         worker_axes=worker_axes)
+        return dc.DCS3GDState(ps, opt, dp, P())
+    if isinstance(state, ssgd.SSGDState):
+        ps = param_specs(cfg, state.params, model_size=model_size,
+                         worker_axes=None)
+        opt = _like_params(cfg, state.opt, model_size, None)
+        return ssgd.SSGDState(ps, opt, P())
+    raise TypeError(type(state))
+
+
+def _like_params(cfg, opt_state, model_size, worker_axes):
+    """Optimizer slots mirror the param tree one level down ({'m': params},
+    plus scalar 't' for adam)."""
+    def build(sub):
+        return param_specs(cfg, sub, model_size=model_size,
+                           worker_axes=worker_axes)
+    out = {}
+    for k, v in opt_state.items():
+        out[k] = P() if k == "t" else build(v)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, batch: PyTree, *,
+                worker_axes: Optional[Tuple[str, ...]] = None,
+                data_axes: Optional[Tuple[str, ...]] = None) -> PyTree:
+    """Training batches: leading worker axis (DC) or plain data-parallel
+    batch axis (serving)."""
+    def spec_of(path, leaf):
+        name = getattr(path[-1], "key", "")
+        if name == "pos":
+            return P()
+        if name == "mrope_positions" and worker_axes is None:
+            return P()
+        lead = worker_axes if worker_axes is not None else data_axes
+        if name == "mrope_positions":  # (W, 3, S)
+            return P(lead, *(None,) * (leaf.ndim - 1))
+        return P(lead, *(None,) * (leaf.ndim - 1))
+    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+
+def cache_specs(cfg: ModelConfig, cache: PyTree, *, model_size: int,
+                data_axes: Tuple[str, ...] = ("data",)) -> PyTree:
+    """Decode caches.  Leaves carry a leading stacked-layer dim.
+
+    KV caches (B, S, KV, hd): shard batch over data; shard KV heads over
+    model when divisible, otherwise shard the *sequence* dim over model
+    (GSPMD computes blocked softmax with the needed collectives).
+    SSM/recurrent states (B, ..., E): shard inner dim over model.
+    MLA latent (B, S, r): shard sequence over model.
+    """
+    kv_ok = _attn_shardable(cfg.eff_n_kv_heads, model_size)
+
+    def spec_of(path, leaf):
+        name, _ = _path_names(path)
+        nd = leaf.ndim  # includes leading layer-stack dim
+        if name in ("k", "v", "xk", "xv"):
+            if kv_ok:
+                return P(None, data_axes, None, "model", None)
+            return P(None, data_axes, "model", None, None)
+        if name in ("ckv", "k_rope"):
+            return P(None, data_axes, "model", None)
+        if name == "conv":      # (L, B, K-1, E)
+            return P(None, data_axes, None, "model")
+        if name == "ssm":       # (L, B, E, N)
+            return P(None, data_axes, "model", None)
+        if name == "h":         # (L, B, W)
+            return P(None, data_axes, "model")
+        return P(None, data_axes, *(None,) * (nd - 2))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)

@@ -1,0 +1,13 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no xla_force_host_platform_device_count here — tests must see the
+# single real CPU device (only launch/dryrun.py forces 512).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

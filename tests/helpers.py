@@ -1,0 +1,58 @@
+"""Shared test utilities."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs import ARCHS, reduced
+
+
+def quadratic_problem(n: int = 16, n_batches: int = 64, seed: int = 0):
+    """A well-conditioned least-squares problem: loss(w, batch) with known
+    optimum.  Returns (loss_fn, init_params, w_star, batch_fn)."""
+    key = random.PRNGKey(seed)
+    k1, k2 = random.split(key)
+    w_star = random.normal(k1, (n,))
+
+    def batch_fn(step: int, worker: int, bs: int = 8):
+        k = random.fold_in(random.fold_in(k2, step), worker)
+        A = random.normal(k, (bs, n)) / jnp.sqrt(n)
+        y = A @ w_star
+        return {"A": A, "y": y}
+
+    def loss_fn(params, batch):
+        pred = batch["A"] @ params["w"]
+        return 0.5 * jnp.mean((pred - batch["y"]) ** 2)
+
+    init = {"w": jnp.zeros((n,))}
+    return loss_fn, init, w_star, batch_fn
+
+
+def stack_batches(batch_fn, step: int, n_workers: int, bs: int = 8):
+    bs_list = [batch_fn(step, w, bs) for w in range(n_workers)]
+    return {k: jnp.stack([b[k] for b in bs_list]) for k in bs_list[0]}
+
+
+def make_lm_batch(cfg, B=2, S=16, key=None, with_labels=True):
+    key = key if key is not None else random.PRNGKey(0)
+    ks = random.split(key, 4)
+    b = {"tokens": random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if with_labels:
+        b["labels"] = random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.vlm is not None:
+        P = cfg.vlm.n_patches
+        b["patches"] = random.normal(ks[2], (B, P, cfg.d_model))
+        b["mrope_positions"] = jnp.tile(jnp.arange(S + P)[None], (3, 1))
+    if cfg.encoder is not None:
+        b["frames"] = random.normal(ks[3], (B, cfg.encoder.n_frames,
+                                            cfg.d_model))
+    return b
+
+
+def tree_allclose(a, b, atol=1e-5):
+    return all(jnp.allclose(x, y, atol=atol)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+ALL_ARCHS = sorted(ARCHS)

@@ -1,0 +1,108 @@
+"""Property-based tests of the delay compensation (Eq. 6/10/17)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.correction import dc_correct
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _tree_norm(t):
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                              for x in jax.tree.leaves(t))))
+
+
+arrays = st.integers(2, 40)
+
+
+@given(n=arrays, seed=st.integers(0, 2**16), lam0=st.floats(0.01, 2.0))
+def test_correction_magnitude_is_lambda0_gnorm(n, seed, lam0):
+    """Eq. 17 makes the correction magnitude EXACTLY lambda0*||g||
+    (global mode, c != 0)."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    g = {"a": jax.random.normal(k1, (n,)), "b": jax.random.normal(k2, (n, 3))}
+    D = jax.tree.map(lambda x: x + 0.5, g)
+    g_t, lam = dc_correct(g, D, lam0)
+    corr = jax.tree.map(lambda gt, gg: gt - gg, g_t, g)
+    cn = _tree_norm(corr)
+    gn = _tree_norm(g)
+    if cn > 1e-12:
+        assert cn == pytest.approx(lam0 * gn, rel=1e-4)
+
+
+@given(n=arrays, seed=st.integers(0, 2**16))
+def test_zero_distance_means_no_correction(n, seed):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
+    D = {"w": jnp.zeros((n,))}
+    g_t, lam = dc_correct(g, D, 0.2)
+    assert float(lam) == 0.0
+    assert jnp.allclose(g_t["w"], g["w"])
+
+
+@given(n=arrays, seed=st.integers(0, 2**16))
+def test_lambda0_zero_is_identity(n, seed):
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed), (n,))}
+    D = {"w": jnp.ones((n,))}
+    g_t, lam = dc_correct(g, D, 0.0)
+    assert jnp.array_equal(g_t["w"], g["w"])
+
+
+@given(n=arrays, seed=st.integers(0, 2**16), scale=st.floats(0.1, 10.0))
+def test_correction_invariant_to_distance_scale(n, seed, scale):
+    """Eq. 17 normalizes by ||g⊙g⊙D||: scaling D leaves the *applied*
+    correction unchanged (direction fixed, magnitude pinned)."""
+    k = jax.random.PRNGKey(seed)
+    g = {"w": jax.random.normal(k, (n,))}
+    D = {"w": jax.random.normal(jax.random.fold_in(k, 1), (n,)) + 2.0}
+    g1, _ = dc_correct(g, D, 0.2)
+    g2, _ = dc_correct(g, jax.tree.map(lambda d: d * scale, D), 0.2)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               rtol=2e-4, atol=1e-5)
+
+
+@given(n=arrays, seed=st.integers(0, 2**16))
+def test_matches_manual_formula(n, seed):
+    k = jax.random.PRNGKey(seed)
+    g = jax.random.normal(k, (n,))
+    D = jax.random.normal(jax.random.fold_in(k, 1), (n,))
+    g_t, lam = dc_correct({"w": g}, {"w": D}, 0.3)
+    c = g * g * D
+    cn = jnp.linalg.norm(c)
+    expected = g + (0.3 * jnp.linalg.norm(g) / cn) * c if cn > 1e-30 else g
+    np.testing.assert_allclose(np.asarray(g_t["w"]), np.asarray(expected),
+                               rtol=1e-4, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_worker_axis_mode(seed):
+    """axis0_is_worker: each worker gets its own lambda."""
+    k = jax.random.PRNGKey(seed)
+    W, n = 3, 8
+    g = {"w": jax.random.normal(k, (W, n))}
+    D = {"w": jax.random.normal(jax.random.fold_in(k, 1), (W, n))}
+    g_t, lam = dc_correct(g, D, 0.2, axis0_is_worker=True)
+    assert lam.shape == (W,)
+    for i in range(W):
+        gi, _ = dc_correct({"w": g["w"][i]}, {"w": D["w"][i]}, 0.2)
+        np.testing.assert_allclose(np.asarray(g_t["w"][i]),
+                                   np.asarray(gi["w"]), rtol=1e-4, atol=1e-6)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_per_tensor_mode(seed):
+    k = jax.random.PRNGKey(seed)
+    g = {"a": jax.random.normal(k, (5,)),
+         "b": jax.random.normal(jax.random.fold_in(k, 1), (7,))}
+    D = jax.tree.map(lambda x: x * 0.5 + 1.0, g)
+    g_t, lam = dc_correct(g, D, 0.2, mode="per_tensor")
+    for name in ("a", "b"):
+        corr = g_t[name] - g[name]
+        cn = float(jnp.linalg.norm(corr))
+        gn = float(jnp.linalg.norm(g[name]))
+        if cn > 1e-9:
+            assert cn == pytest.approx(0.2 * gn, rel=1e-3)

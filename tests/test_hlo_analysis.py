@@ -1,0 +1,71 @@
+"""HLO analyzer correctness on known jitted programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import analyze_hlo, collective_bytes
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_dot_flops_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+    c = _compile(f, jnp.zeros((8, 64)), jnp.zeros((64, 64)))
+    st = analyze_hlo(c.as_text())
+    assert st.dot_flops == 2 * 8 * 64 * 64 * 7
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+    c = _compile(f, jnp.zeros((4, 32)), jnp.zeros((32, 32)))
+    st = analyze_hlo(c.as_text())
+    assert st.dot_flops == 2 * 4 * 32 * 32 * 15
+
+
+def test_plain_dot_and_traffic():
+    def g(a, b):
+        return a @ b
+    c = _compile(g, jnp.zeros((128, 256)), jnp.zeros((256, 512)))
+    st = analyze_hlo(c.as_text())
+    assert st.dot_flops == 2 * 128 * 256 * 512
+    io = (128 * 256 + 256 * 512 + 128 * 512) * 4
+    assert st.traffic_bytes == pytest.approx(io, rel=0.2)
+
+
+def test_batched_dot_general_flops():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    c = _compile(f, jnp.zeros((4, 8, 16)), jnp.zeros((4, 16, 32)))
+    st = analyze_hlo(c.as_text())
+    assert st.dot_flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_no_collectives_single_device():
+    c = _compile(lambda x: x * 2, jnp.zeros((8,)))
+    st = analyze_hlo(c.as_text())
+    assert st.coll_bytes == 0.0
+    cb = collective_bytes(c.as_text())
+    assert cb["total"] == 0.0
+
+
+def test_gather_traffic_not_full_table():
+    """Embedding-style gather must charge ~slice bytes, not the table."""
+    table = jnp.zeros((50_000, 64))
+    ids = jnp.zeros((32,), jnp.int32)
+    c = _compile(lambda t, i: jnp.take(t, i, axis=0), table, ids)
+    st = analyze_hlo(c.as_text())
+    assert st.traffic_bytes < 50_000 * 64 * 4 * 0.5, st.traffic_bytes

@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Sweeps shapes/dtypes per kernel; allclose against repro.kernels.ref.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.kernels import dc_update as K
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import dc_fused_update_tree, dc_lambda, dc_norms_tree
+from repro.models.attention import _blocked_attention
+
+
+@pytest.mark.parametrize("rows", [256, 512, 1024])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_dc_norms_kernel(rows, seed):
+    k1, k2 = random.split(random.PRNGKey(seed))
+    g = random.normal(k1, (rows, K.LANES))
+    d = random.normal(k2, (rows, K.LANES))
+    gsq, csq = K.dc_norms(g, d, interpret=True)
+    rg, rc = ref.dc_norms_ref(g, d)
+    np.testing.assert_allclose(gsq, rg, rtol=1e-5)
+    np.testing.assert_allclose(csq, rc, rtol=1e-5)
+
+
+@pytest.mark.parametrize("w_dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows", [256, 768])
+def test_dc_fused_update_kernel(w_dtype, rows):
+    ks = random.split(random.PRNGKey(2), 4)
+    g = random.normal(ks[0], (rows, K.LANES))
+    d = random.normal(ks[1], (rows, K.LANES))
+    m = random.normal(ks[2], (rows, K.LANES))
+    w = random.normal(ks[3], (rows, K.LANES)).astype(w_dtype)
+    args = dict(lam=0.25, mu=0.9, eta=0.05, wd=2.3e-4)
+    wn, mn, dn = K.dc_fused_update(g, d, m, w, interpret=True, **args)
+    rw, rm, rd = ref.dc_fused_update_ref(g, d, m, w, decay_mask=True, **args)
+    atol = 1e-5 if w_dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(wn, np.float32),
+                               np.asarray(rw, np.float32), atol=atol)
+    np.testing.assert_allclose(mn, rm, atol=1e-5)
+    np.testing.assert_allclose(dn, rd, atol=1e-5)
+
+
+def test_fused_tree_matches_unfused_step_math():
+    """Pytree wrapper: same result as the reference formulas leaf-by-leaf,
+    with weight decay masked off rank-1 leaves."""
+    ks = random.split(random.PRNGKey(3), 8)
+    params = {"w": random.normal(ks[0], (33, 7)), "scale": random.normal(ks[1], (19,))}
+    g = jax.tree.map(lambda x: random.normal(ks[2], x.shape), params)
+    d = jax.tree.map(lambda x: random.normal(ks[3], x.shape), params)
+    m = jax.tree.map(lambda x: random.normal(ks[4], x.shape), params)
+
+    gsq, csq = dc_norms_tree(g, d, interpret=True)
+    lam = dc_lambda(gsq, csq, 0.2)
+    wn, mn, dn = dc_fused_update_tree(g, d, m, params, lam=lam, mu=0.9,
+                                      eta=0.1, wd=1e-3, interpret=True)
+    for name, decay in (("w", True), ("scale", False)):
+        rw, rm, rd = ref.dc_fused_update_ref(
+            g[name], d[name], m[name], params[name], lam=lam, mu=0.9, eta=0.1,
+            wd=1e-3, decay_mask=decay)
+        np.testing.assert_allclose(wn[name], rw, atol=1e-5)
+        np.testing.assert_allclose(mn[name], rm, atol=1e-5)
+        np.testing.assert_allclose(dn[name], rd, atol=1e-5)
+    # lambda from fused norms == Eq. 17
+    import jax as _jax
+    gn = jnp.sqrt(sum(jnp.sum(x**2) for x in _jax.tree.leaves(g)))
+    c = _jax.tree.map(lambda a, b: a * a * b, g, d)
+    cn = jnp.sqrt(sum(jnp.sum(x**2) for x in _jax.tree.leaves(c)))
+    np.testing.assert_allclose(lam, 0.2 * gn / cn, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Sk, KV, G, hd, causal, window)
+    (2, 128, 128, 2, 2, 64, True, 0),
+    (1, 96, 96, 1, 4, 64, True, 32),
+    (2, 64, 64, 4, 1, 128, False, 0),
+    (1, 200, 200, 2, 1, 64, True, 0),       # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(shape, dtype):
+    B, Sq, Sk, KV, G, hd, causal, window = shape
+    ks = random.split(random.PRNGKey(7), 3)
+    q = random.normal(ks[0], (B, Sq, KV, G, hd)).astype(dtype)
+    k = random.normal(ks[1], (B, Sk, KV, hd)).astype(dtype)
+    v = random.normal(ks[2], (B, Sk, KV, hd)).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        block_q=64, block_k=64, interpret=True)
+    pos_q, pos_k = jnp.arange(Sq), jnp.arange(Sk)
+    o_ref = _blocked_attention(q, k, v, pos_q, pos_k, causal=causal,
+                               window=window, q_chunk=64, kv_chunk=64)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=atol)
+
+
+def test_decode_attention_ref_consistency():
+    """ref.decode_attention_ref agrees with the model decode path's math."""
+    ks = random.split(random.PRNGKey(9), 3)
+    B, S, KV, G, hd = 2, 32, 2, 3, 16
+    q = random.normal(ks[0], (B, KV, G, hd))
+    k = random.normal(ks[1], (B, S, KV, hd))
+    v = random.normal(ks[2], (B, S, KV, hd))
+    out = ref.decode_attention_ref(q, k, v, valid_len=20)
+    # manual
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k) * hd**-0.5
+    s = jnp.where((jnp.arange(S) < 20)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    expected = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    np.testing.assert_allclose(out, expected, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [
+    # (B, S, E, N, block_s, block_e)
+    (2, 64, 32, 8, 16, 16),
+    (1, 96, 16, 16, 32, 16),
+    (2, 32, 64, 4, 32, 64),
+])
+def test_ssm_scan_kernel(shape):
+    from repro.kernels.ssm_scan import ssm_scan
+    B, S, E, N, bs, be = shape
+    ks = random.split(random.PRNGKey(11), 5)
+    a_log = random.normal(ks[0], (E, N)) * 0.3
+    dt = jax.nn.softplus(random.normal(ks[1], (B, S, E)))
+    dtx = dt * random.normal(ks[2], (B, S, E))
+    b = random.normal(ks[3], (B, S, N))
+    c = random.normal(ks[4], (B, S, N))
+    y, h = ssm_scan(a_log, dt, dtx, b, c, block_s=bs, block_e=be,
+                    interpret=True)
+    yr, hr = ref.ssm_scan_ref(a_log, dt, dtx, b, c)
+    np.testing.assert_allclose(y, yr, atol=1e-4)
+    np.testing.assert_allclose(h, hr, atol=1e-4)
+
+
+def test_ssm_scan_kernel_matches_mamba_module():
+    """End-to-end: the kernel reproduces the module's fused chunk scan."""
+    from repro.core.types import SSMConfig
+    from repro.kernels.ssm_scan import ssm_scan
+    from repro.models import ssm as ssm_mod
+    sc = SSMConfig()
+    d = 32
+    p = ssm_mod.init_mamba(random.PRNGKey(0), d, sc, jnp.float32)
+    x = random.normal(random.PRNGKey(1), (2, 16, d))
+    y_module, h_module = ssm_mod.mamba_forward(p, x, sc, chunk=8,
+                                               return_state=True)
+    # rebuild the kernel inputs exactly as the module does
+    from repro.models.layers import causal_conv1d
+    r = ssm_mod.dt_rank_of(d, sc)
+    n = sc.state_dim
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(causal_conv1d(xi, p["conv_w"], p["conv_b"]))
+    dbc = xi @ p["w_x"]
+    dt_low, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus((dt_low @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])
+    y_k, h_k = ssm_scan(p["a_log"], dt, dt * xi, Bm, Cm, block_s=8,
+                        block_e=16, interpret=True)
+    y_full = (y_k + p["d_skip"] * xi).astype(x.dtype) * jax.nn.silu(z)
+    y_full = y_full @ p["w_out"]
+    np.testing.assert_allclose(y_full, y_module, atol=1e-4)
+    np.testing.assert_allclose(h_k, h_module, atol=1e-4)
