@@ -24,3 +24,10 @@ def timeit(fn, *args, iters: int = 5, warmup: int = 2):
 
 def emit(name: str, us_per_call, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def requested_algos(args, default=("ssgd", "stale", "dc_s3gd")):
+    """Uniform --algo passthrough from benchmarks/run.py (None when a
+    benchmark module is run standalone)."""
+    algos = getattr(args, "algos", None)
+    return tuple(algos) if algos else tuple(default)

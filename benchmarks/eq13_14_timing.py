@@ -20,7 +20,7 @@ import jax
 
 from benchmarks.common import emit, timeit
 from repro.configs import get_config, reduced
-from repro.core import dc_s3gd, ssgd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.data import SyntheticLMDataset, worker_batches
 from repro.models.transformer import Model
@@ -46,7 +46,7 @@ def analytic_from_dryrun():
     return rows
 
 
-def measured_cpu():
+def measured_cpu(algos=("dc_s3gd", "ssgd"), reducer: str = "mean_allreduce"):
     cfg = reduced(get_config("qwen3-0.6b"))
     model = Model(cfg, remat=False, q_chunk=32, kv_chunk=32, scan_chunk=32,
                   loss_chunk=64)
@@ -56,23 +56,23 @@ def measured_cpu():
     W = 4
     batch = worker_batches(ds, 0, W, 4)
 
-    s_dc = dc_s3gd.init(params, W, dc_cfg)
-    f_dc = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
-        s, b, loss_fn=model.loss, cfg=dc_cfg))
-    us_dc = timeit(f_dc, s_dc, batch, iters=3)
-
-    s_ss = ssgd.init(params, dc_cfg)
-    f_ss = jax.jit(lambda s, b: ssgd.ssgd_step(s, b, loss_fn=model.loss,
-                                               cfg=dc_cfg))
-    us_ss = timeit(f_ss, s_ss, batch, iters=3)
-    emit("eq13_14_measured_dc_step", us_dc, "cpu 4-worker step")
-    emit("eq13_14_measured_ssgd_step", us_ss, "cpu 4-worker step")
-    return us_dc, us_ss
+    out = []
+    for algo in algos:
+        alg = registry.make(algo, dc_cfg, n_workers=W, reducer=reducer)
+        state = alg.init(params)
+        f = jax.jit(lambda s, b, alg=alg: alg.step(s, b,
+                                                   loss_fn=model.loss))
+        us = timeit(f, state, batch, iters=3)
+        emit(f"eq13_14_measured_{algo}_step", us, "cpu 4-worker step")
+        out.append(us)
+    return tuple(out)
 
 
-def main():
+def main(args=None):
+    from benchmarks.common import requested_algos
     analytic_from_dryrun()
-    measured_cpu()
+    measured_cpu(algos=requested_algos(args, default=("dc_s3gd", "ssgd")),
+                 reducer=getattr(args, "reducer", "mean_allreduce"))
 
 
 if __name__ == "__main__":

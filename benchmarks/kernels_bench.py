@@ -66,7 +66,7 @@ def bench_flash_attention():
     emit("kernel_blocked_attention_ref_1k", us2, "XLA-materialized baseline")
 
 
-def main():
+def main(args=None):
     bench_dc_norms()
     bench_dc_update()
     bench_flash_attention()

@@ -8,7 +8,7 @@ import json
 from benchmarks.common import emit
 
 
-def main():
+def main(args=None):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     if not files:
         emit("roofline_table", 0.0, "no dry-run records; run "

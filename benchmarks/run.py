@@ -2,13 +2,22 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  table1_convergence   Table I: final error, SSGD vs stale vs DC-S3GD
+  table1_convergence   Table I: final error per registered algorithm
   fig1_error_curves    Fig. 1: training-error curves per (N, batch)
   eq13_14_timing       Eq. 13/14: step-time model (analytic + measured)
   staleness_growth     §III-D.2: ||D_i|| vs ||w_PS − w_i|| growth in N
   kernels_bench        Pallas kernel microbenchmarks vs XLA baselines
   roofline_table       §Roofline rows from the dry-run artifacts
+
+Algorithm / reduce-topology selection is uniform: ``--algo`` (repeatable)
+and ``--reducer`` pass through to every benchmark, which builds its
+algorithms via ``repro.core.registry.make`` — no per-benchmark argument
+plumbing.
+
+  python benchmarks/run.py --algo ssgd --algo dc_s3gd --reducer gossip
+  python benchmarks/run.py --only table1_convergence,kernels_bench
 """
+import argparse
 import sys
 from pathlib import Path
 
@@ -16,14 +25,40 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
-def main() -> None:
+def build_argparser():
+    from repro.core import registry
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algo", action="append", default=None,
+                    choices=registry.names(), dest="algos",
+                    help="algorithms to benchmark (repeatable); default: "
+                         "ssgd, stale, dc_s3gd")
+    ap.add_argument("--reducer", choices=registry.names(registry.REDUCER),
+                    default="mean_allreduce",
+                    help="reduce topology for every trained benchmark")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark modules")
+    return ap
+
+
+def main(argv=None) -> None:
+    # args.algos stays None unless --algo given; each benchmark resolves
+    # the default through benchmarks.common.requested_algos (one owner)
+    args = build_argparser().parse_args(argv)
+
     from benchmarks import (eq13_14_timing, fig1_error_curves, kernels_bench,
                             roofline_table, staleness_growth,
                             table1_convergence)
+    mods = {m.__name__.split(".")[-1]: m
+            for m in (table1_convergence, fig1_error_curves, eq13_14_timing,
+                      staleness_growth, kernels_bench, roofline_table)}
+    selected = list(mods) if args.only is None else \
+        [s.strip() for s in args.only.split(",")]
+    unknown = [s for s in selected if s not in mods]
+    assert not unknown, f"unknown benchmarks {unknown}; have {sorted(mods)}"
+
     print("name,us_per_call,derived")
-    for mod in (table1_convergence, fig1_error_curves, eq13_14_timing,
-                staleness_growth, kernels_bench, roofline_table):
-        mod.main()
+    for name in selected:
+        mods[name].main(args)
 
 
 if __name__ == '__main__':

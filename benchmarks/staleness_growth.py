@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import dc_asgd, dc_s3gd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 
 from pathlib import Path
@@ -32,11 +32,10 @@ N_PASSES = 6  # measure in the early (pre-convergence) phase, where the
 
 def dc_s3gd_spread(W: int) -> float:
     loss_fn, init, _, batch_fn = quadratic_problem(n=32, seed=1)
-    cfg = DCS3GDConfig(learning_rate=0.2, momentum=0.9, lambda0=0.0,
-                       weight_decay=0.0)
-    state = dc_s3gd.init(init, W, cfg)
-    step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
-        s, b, loss_fn=loss_fn, cfg=cfg))
+    cfg = DCS3GDConfig(learning_rate=0.2, momentum=0.9, weight_decay=0.0)
+    alg = registry.make("stale", cfg, n_workers=W)  # compensation off
+    state = alg.init(init)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
     spreads = []
     for t in range(N_PASSES):
         state, m = step(state, stack_batches(batch_fn, t, W))
@@ -50,16 +49,14 @@ def dc_asgd_staleness(W: int) -> float:
     between a worker's visits the PS absorbs N-1 other updates, so this
     distance grows ~linearly in N (paper §III-D.2)."""
     loss_fn, init, _, batch_fn = quadratic_problem(n=32, seed=1)
-    cfg = DCS3GDConfig(learning_rate=0.2, momentum=0.9, lambda0=0.0,
-                       weight_decay=0.0)
-    state = dc_asgd.init(init, W, cfg)
+    cfg = DCS3GDConfig(learning_rate=0.2, momentum=0.9, weight_decay=0.0)
+    alg = registry.make("dc_asgd", cfg, n_workers=W, compensator="none")
+    state = alg.init(init)
     dists = []
     total = W * N_PASSES
     for t in range(total):
-        wid = t % W
-        state, m = dc_asgd.dc_asgd_step(state, wid, batch_fn(t, wid),
-                                        loss_fn=loss_fn, cfg=cfg,
-                                        compensate=False)
+        state, m = alg.step(state, stack_batches(batch_fn, t, W),
+                            loss_fn=loss_fn)
         if t >= 2 * W:
             dists.append(float(m["staleness_dist"]))
     return float(np.mean(dists))
@@ -71,7 +68,7 @@ def growth_exponent(ns, ds):
     return float(np.polyfit(x, y, 1)[0])
 
 
-def main():
+def main(args=None):
     ns = [2, 4, 8, 16]
     s3 = [dc_s3gd_spread(W) for W in ns]
     ps = [dc_asgd_staleness(W) for W in ns]

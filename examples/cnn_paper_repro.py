@@ -16,7 +16,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core import dc_s3gd, ssgd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.data import SyntheticImageDataset, worker_batches
 from repro.models.cnn import cnn_loss_fn, init_resnet, resnet_apply, top1_error
@@ -30,22 +30,16 @@ def train(algo: str, n_workers: int, steps: int, eta_sn: float = 0.05):
     ds = SyntheticImageDataset(n_classes=8, image_size=16, seed=0, noise=0.4)
     cfg = DCS3GDConfig(
         learning_rate=theoretical_lr(eta_sn, n_workers),  # Eq. 16
-        momentum=0.9,
-        lambda0=0.0 if algo == "stale" else 0.2,
+        momentum=0.9, lambda0=0.2,
         weight_decay=1e-4, weight_decay_k=2.3,            # §IV-A
         warmup_steps=max(steps // 6, 1),                  # early-stopped warmup
         total_steps=steps)
-    if algo == "ssgd":
-        state = ssgd.init(params, cfg)
-        step = jax.jit(lambda s, b: ssgd.ssgd_step(s, b, loss_fn=loss_fn,
-                                                   cfg=cfg))
-    else:
-        state = dc_s3gd.init(params, n_workers, cfg)
-        step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
-            s, b, loss_fn=loss_fn, cfg=cfg))
+    alg = registry.make(algo, cfg, n_workers=n_workers)
+    state = alg.init(params)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
     for t in range(steps):
         state, m = step(state, worker_batches(ds, t, n_workers, 16))
-    final = state.params if algo == "ssgd" else dc_s3gd.average_params(state)
+    final = alg.eval_params(state)
     errs = [float(top1_error(resnet_apply, final, ds.batch(10_000 + i, 0, 64)))
             for i in range(4)]
     return float(m["loss"]), sum(errs) / len(errs)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_pytree
-from repro.core import dc_s3gd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig, ModelConfig
 from repro.data import SyntheticLMDataset, worker_batches
 from repro.models.transformer import Model
@@ -55,9 +55,10 @@ def main():
                           weight_decay=1e-4,
                           warmup_steps=max(args.steps // 6, 1),
                           total_steps=args.steps)
-    state = dc_s3gd.init(params, args.workers, dc_cfg)
-    step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
-        s, b, loss_fn=model.loss, cfg=dc_cfg), donate_argnums=0)
+    alg = registry.make("dc_s3gd", dc_cfg, n_workers=args.workers)
+    state = alg.init(params)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=model.loss),
+                   donate_argnums=0)
 
     data = SyntheticLMDataset(cfg.vocab_size, args.seq, seed=0)
     t0 = time.time()
@@ -73,9 +74,9 @@ def main():
         if args.ckpt_every and it and it % args.ckpt_every == 0:
             args.out.mkdir(parents=True, exist_ok=True)
             save_pytree(args.out / f"step{it}.npz",
-                        dc_s3gd.average_params(state), step=it)
+                        alg.eval_params(state), step=it)
     args.out.mkdir(parents=True, exist_ok=True)
-    save_pytree(args.out / "final.npz", dc_s3gd.average_params(state),
+    save_pytree(args.out / "final.npz", alg.eval_params(state),
                 step=args.steps)
     print(f"[lm100m] done in {time.time()-t0:.0f}s; "
           f"final checkpoint -> {args.out}/final.npz")

@@ -1,0 +1,8 @@
+"""DC-S3GD reproduction (arXiv:1911.02516) — JAX/Pallas.
+
+Entry points: `repro.core.registry` (algorithm construction),
+`repro.launch.train` / `repro.launch.serve` (drivers), `repro.configs`
+(architectures).  See docs/api.md.
+"""
+
+__version__ = "0.2.0"

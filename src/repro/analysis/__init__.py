@@ -1,0 +1,1 @@
+"""Compile-time analysis: HLO parsing, roofline model, reports."""

@@ -55,6 +55,12 @@ def restore_pytree(path: str | Path, like: PyTree) -> PyTree:
         missing = set(meta["names"]) ^ set(names)
         raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]}")
     leaves = [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(names))]
+    bad = [(n, tuple(x.shape), tuple(getattr(l, "shape", ())))
+           for n, x, l in zip(names, leaves, like_leaves)
+           if hasattr(l, "shape") and tuple(x.shape) != tuple(l.shape)]
+    if bad:
+        raise ValueError(f"checkpoint shape mismatch (ckpt vs template): "
+                         f"{bad[:5]}")
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -1,3 +1,17 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core algorithm package.
+
+The paper's system lives here: the `DistributedOptimizer` protocol
+(`repro.core.api`), the construction registry (`repro.core.registry`), the
+composable pieces (`repro.core.reduce`, `repro.core.compensate`,
+`repro.optim.local`), and the algorithms themselves (`dc_s3gd`, `ssgd`,
+`dc_asgd`) — constructed from config via ``registry.make(name, cfg)``,
+never imported by name at call sites.
+"""
+from repro.core import registry
+from repro.core.api import (Compensator, DistributedOptimizer,
+                            LocalOptimizer, Reducer, TrainState)
+
+__all__ = [
+    "registry", "TrainState", "DistributedOptimizer", "LocalOptimizer",
+    "Reducer", "Compensator",
+]

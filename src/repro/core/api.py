@@ -1,0 +1,128 @@
+"""The `DistributedOptimizer` protocol — the seam every algorithm plugs into.
+
+The paper's DC-S3GD (Algorithm 1) is one point in a family: synchronous
+SSGD, uncompensated stale-synchronous SGD, and the DC-ASGD baseline
+(Zheng et al. 2016) all share the shape
+
+    local update U(g, eta, mu)  +  a cross-worker reduction
+                                +  optional delay compensation.
+
+This module defines the contracts; `repro.core.registry` constructs
+concrete algorithms from config so call sites (train/serve/dryrun/
+benchmarks) never import an algorithm by name:
+
+    from repro.core import registry
+    alg = registry.make("dc_s3gd", dc_cfg, n_workers=4)
+    state = alg.init(params)
+    state, metrics = alg.step(state, batch, loss_fn=model.loss)
+    weights = alg.eval_params(state)
+
+Composable pieces (each with its own registry kind):
+
+* ``LocalOptimizer`` — U(.): ``(grads, slots, params, schedules) ->
+  (delta, slots)`` (momentum / nesterov / lars / adam, `repro.optim.local`);
+* ``Reducer`` — the cross-worker reduction over the leading worker axis
+  (``mean_allreduce``, ring-neighborhood ``gossip``, `repro.core.reduce`);
+* ``Compensator`` — the pseudo-Hessian staleness correction
+  (``dc`` / ``none``, `repro.core.compensate`), shared verbatim by
+  DC-S3GD and DC-ASGD.
+"""
+from __future__ import annotations
+
+from typing import (Any, Callable, Dict, Mapping, NamedTuple, Protocol,
+                    Tuple, runtime_checkable)
+
+import jax.numpy as jnp
+
+PyTree = Any
+Metrics = Dict[str, jnp.ndarray]
+LossFn = Callable[[PyTree, PyTree], jnp.ndarray]
+# traced scalar schedules handed to local optimizers each step
+Schedules = Mapping[str, jnp.ndarray]
+
+
+class TrainState(NamedTuple):
+    """Frozen generic training state shared by every algorithm.
+
+    params  model weights — (W, ...) per-worker for worker-sharded
+            algorithms, canonical shapes for replicated ones;
+    opt     local-optimizer slots (e.g. {"m": ...} for momentum);
+    comm    algorithm communication state (e.g. {"delta_prev": ...} for
+            DC-S3GD's in-flight all-reduce payload; {} when stateless);
+    step    scalar int32 iteration counter.
+    """
+
+    params: PyTree
+    opt: PyTree
+    comm: PyTree
+    step: jnp.ndarray
+
+
+@runtime_checkable
+class LocalOptimizer(Protocol):
+    """U(g, eta, mu) — returns the *update* delta_w plus new slots."""
+
+    name: str
+
+    def init(self, params: PyTree) -> PyTree:
+        ...
+
+    def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
+                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+        ...
+
+
+@runtime_checkable
+class Reducer(Protocol):
+    """Cross-worker reduction of a (W, ...)-leaved pytree.
+
+    Returns a pytree whose leaves broadcast against (W, ...): shape
+    (1, ...) for a global mean (``mean_allreduce``), (W, ...) for
+    per-worker neighborhood reductions (``gossip``).  f32 out; the wire
+    dtype (``comm_dtype``) is the reducer's own concern.
+    """
+
+    name: str
+
+    def __call__(self, tree: PyTree) -> PyTree:
+        ...
+
+
+@runtime_checkable
+class Compensator(Protocol):
+    """Staleness correction g -> g̃ given a distance tree D.
+
+    Returns (corrected grads, lambda used).  ``lambda0 == 0`` must be the
+    identity (the ``none`` compensator).
+    """
+
+    name: str
+    lambda0: float
+
+    def __call__(self, grads: PyTree, distance: PyTree, *,
+                 axis0_is_worker: bool = False
+                 ) -> Tuple[PyTree, jnp.ndarray]:
+        ...
+
+
+@runtime_checkable
+class DistributedOptimizer(Protocol):
+    """A complete distributed training algorithm.
+
+    ``worker_sharded`` tells the sharding layer whether state leaves carry
+    a leading worker axis (DC-S3GD: yes; SSGD/DC-ASGD-PS: no).
+    """
+
+    name: str
+    worker_sharded: bool
+
+    def init(self, params: PyTree) -> TrainState:
+        ...
+
+    def step(self, state: TrainState, batch: PyTree, *, loss_fn: LossFn
+             ) -> Tuple[TrainState, Metrics]:
+        ...
+
+    def eval_params(self, state: TrainState) -> PyTree:
+        """Canonical (unstacked) weights for evaluation/serving."""
+        ...

@@ -11,72 +11,120 @@ This is a *simulator* for the convergence/staleness benchmarks — it runs
 the real model/loss on CPU but does not distribute (the whole point of the
 baseline is its centralized communication pattern, which we do not port to
 the mesh).
+
+`DCASGD` implements the `DistributedOptimizer` protocol: state is a
+`TrainState` whose ``params`` is the PS copy and whose ``comm`` carries
+the (W, ...) stale worker copies; :meth:`DCASGD.step` takes the same
+(W, b, ...)-leaved batch as the other algorithms and performs ONE PS
+transaction for the round-robin worker ``step mod W`` (selecting that
+worker's shard of the batch).  It shares the `Compensator` and
+`LocalOptimizer` pieces with DC-S3GD verbatim.  The module-level ``init``
+/ ``dc_asgd_step`` are deprecated shims kept for one PR.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.correction import dc_correct
+from repro.core import registry
+from repro.core.api import LossFn, Metrics, TrainState
 from repro.core.types import DCS3GDConfig
-from repro.optim.local import init_local_state, local_update
+from repro.optim import local as local_opt
 
 PyTree = Any
 
 
 class DCASGDState(NamedTuple):
+    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
+
     ps_params: PyTree          # the parameter-server copy
     worker_params: PyTree      # (W, ...) stale worker copies
     opt: PyTree                # PS-side optimizer slots
     step: jnp.ndarray
 
 
-def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCASGDState:
-    wp = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params)
-    return DCASGDState(params, wp, init_local_state(params, cfg.local_optimizer),
-                       jnp.zeros((), jnp.int32))
+@registry.register(registry.ALGORITHM, "dc_asgd")
+class DCASGD:
+    """PS-asynchronous baseline through the protocol (round-robin sim)."""
 
+    name = "dc_asgd"
+    worker_sharded = False
 
-def dc_asgd_step(state: DCASGDState, worker_id, batch_i: PyTree, *,
-                 loss_fn: Callable, cfg: DCS3GDConfig,
-                 compensate: bool = True):
-    """One PS transaction: worker ``worker_id`` submits a gradient computed
-    at its stale copy; the PS applies the (optionally delay-compensated)
-    update and sends fresh weights back to that worker only."""
-    w_i = jax.tree.map(lambda p: p[worker_id], state.worker_params)
-    loss, g = jax.value_and_grad(loss_fn)(w_i, batch_i)
+    def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
+                 local_optimizer=None, compensator=None, **_ignored):
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.local_optimizer = (
+            local_opt.from_config(cfg) if local_optimizer is None
+            else registry.make_local_optimizer(local_optimizer, cfg))
+        self.compensator = registry.make_compensator(
+            "dc" if compensator is None else compensator, cfg)
 
-    if compensate:
+    def init(self, params: PyTree) -> TrainState:
+        wp = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (self.n_workers,) + p.shape),
+            params)
+        return TrainState(params=params,
+                          opt=self.local_optimizer.init(params),
+                          comm={"worker_params": wp},
+                          step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: TrainState, batch: PyTree, *, loss_fn: LossFn
+             ) -> Tuple[TrainState, Metrics]:
+        """One PS transaction for worker ``state.step mod W``, fed that
+        worker's (b, ...) shard of the stacked (W, b, ...) batch.
+
+        The other W−1 shards are discarded — the cost of taking the
+        protocol's uniform batch layout.  Acceptable for this CPU-scale
+        simulator; callers on a hot path can hand `_transaction` the
+        single shard directly."""
+        wid = state.step % self.n_workers
+        batch_i = jax.tree.map(lambda x: x[wid], batch)
+        return self._transaction(state, wid, batch_i, loss_fn=loss_fn)
+
+    def _transaction(self, state: TrainState, worker_id, batch_i: PyTree, *,
+                     loss_fn: LossFn) -> Tuple[TrainState, Metrics]:
+        """Worker ``worker_id`` submits a gradient computed at its stale
+        copy; the PS applies the (optionally delay-compensated) update and
+        sends fresh weights back to that worker only."""
+        cfg = self.cfg
+        worker_params = state.comm["worker_params"]
+        w_i = jax.tree.map(lambda p: p[worker_id], worker_params)
+        loss, g = jax.value_and_grad(loss_fn)(w_i, batch_i)
+
         # DC-ASGD Eq. 6: correct toward the PS copy
         D = jax.tree.map(
             lambda ps, wi: ps.astype(jnp.float32) - wi.astype(jnp.float32),
-            state.ps_params, w_i)
-        g, lam = dc_correct(g, D, cfg.lambda0, mode=cfg.lambda_norm)
-    else:
-        lam = jnp.zeros(())
+            state.params, w_i)
+        g, lam = self.compensator(g, D)
 
-    upd = local_update(cfg.local_optimizer)
-    delta, opt = upd(g, state.opt, state.ps_params,
-                     lr=jnp.float32(cfg.learning_rate),
-                     momentum=cfg.momentum,
-                     weight_decay=jnp.float32(cfg.weight_decay),
-                     nesterov=cfg.nesterov)
-    new_ps = jax.tree.map(
-        lambda w, dw: (w.astype(jnp.float32)
-                       + dw.astype(jnp.float32)).astype(w.dtype),
-        state.ps_params, delta)
-    # only the submitting worker receives updated weights
-    new_workers = jax.tree.map(
-        lambda wp, ps: wp.at[worker_id].set(ps.astype(wp.dtype)),
-        state.worker_params, new_ps)
+        lr = jnp.float32(cfg.learning_rate)
+        wd = jnp.float32(cfg.weight_decay)
+        delta, opt = self.local_optimizer(g, state.opt, state.params,
+                                          {"lr": lr, "weight_decay": wd})
+        new_ps = jax.tree.map(
+            lambda w, dw: (w.astype(jnp.float32)
+                           + dw.astype(jnp.float32)).astype(w.dtype),
+            state.params, delta)
+        # only the submitting worker receives updated weights
+        new_workers = jax.tree.map(
+            lambda wp, ps: wp.at[worker_id].set(ps.astype(wp.dtype)),
+            worker_params, new_ps)
 
-    staleness = _dist(new_ps, w_i)
-    return (DCASGDState(new_ps, new_workers, opt, state.step + 1),
-            {"loss": loss, "lambda": jnp.asarray(lam, jnp.float32).mean()
-             if hasattr(lam, "mean") else lam, "staleness_dist": staleness})
+        staleness = _dist(new_ps, w_i)
+        metrics = {
+            "loss": loss, "lr": lr, "wd": wd,
+            "lambda": jnp.asarray(lam, jnp.float32).mean()
+            if hasattr(lam, "mean") else lam,
+            "staleness_dist": staleness,
+        }
+        return TrainState(new_ps, opt, {"worker_params": new_workers},
+                          state.step + 1), metrics
+
+    def eval_params(self, state: TrainState) -> PyTree:
+        return state.params
 
 
 def _dist(a: PyTree, b: PyTree) -> jnp.ndarray:
@@ -84,3 +132,31 @@ def _dist(a: PyTree, b: PyTree) -> jnp.ndarray:
         lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32)
                                         - y.astype(jnp.float32))), a, b)))
     return jnp.sqrt(sq)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (pre-registry surface; removed next PR)
+# ---------------------------------------------------------------------------
+
+
+def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCASGDState:
+    """Deprecated: use ``registry.make("dc_asgd", cfg, n_workers=W).init``."""
+    st = DCASGD(cfg, n_workers=n_workers).init(params)
+    return DCASGDState(st.params, st.comm["worker_params"], st.opt, st.step)
+
+
+def dc_asgd_step(state: DCASGDState, worker_id, batch_i: PyTree, *,
+                 loss_fn: Callable, cfg: DCS3GDConfig,
+                 compensate: bool = True):
+    """Deprecated: use ``registry.make("dc_asgd", cfg, ...).step``."""
+    n_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
+    alg = DCASGD(cfg, n_workers=n_workers,
+                 compensator="dc" if compensate else "none")
+    ts = TrainState(state.ps_params, state.opt,
+                    {"worker_params": state.worker_params}, state.step)
+    new_state, metrics = alg._transaction(ts, worker_id, batch_i,
+                                          loss_fn=loss_fn)
+    legacy = DCASGDState(new_state.params,
+                         new_state.comm["worker_params"],
+                         new_state.opt, new_state.step)
+    return legacy, metrics

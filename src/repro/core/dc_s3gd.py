@@ -6,38 +6,53 @@ Decentralized stale-synchronous SGD with delay compensation:
   worker axis ``W`` on every parameter/optimizer leaf, sharded over the
   (``pod``, ``data``) mesh axes;
 * the all-reduce of the *previous* update ``Δw^{t-1}`` (``MPI_Iallreduce``
-  in the paper) is the cross-worker mean of ``state.delta_prev`` — it has
-  **no data dependency** on this step's gradients, so XLA's latency-hiding
-  scheduler overlaps it with the forward/backward pass.  The paper's
-  ``MPI_Wait`` is the dependency of ``D_i`` on that mean;
-* the staleness error is compensated with the pseudo-Hessian correction
-  (`repro.core.correction`), and weights move to the average while applying
-  the corrected local update in one fused operation (Eq. 12).
+  in the paper) is the pluggable `Reducer` applied to the carried
+  ``delta_prev`` — it has **no data dependency** on this step's gradients,
+  so XLA's latency-hiding scheduler overlaps it with the forward/backward
+  pass.  The paper's ``MPI_Wait`` is the dependency of ``D_i`` on that
+  reduction;
+* the staleness error is compensated by the pluggable `Compensator`
+  (pseudo-Hessian correction, `repro.core.correction`), and weights move
+  to the average while applying the corrected local update in one fused
+  operation (Eq. 12).
 
-Algorithm 1 line-by-line mapping (comments in :func:`dc_s3gd_step`).
+The algorithm is the `DCS3GD` class — a thin composition of a
+`LocalOptimizer`, a `Reducer`, and a `Compensator` over the generic
+`TrainState` (params / opt / comm / step), registered as ``"dc_s3gd"``
+(and, with compensation disabled, ``"stale"``) in `repro.core.registry`.
+
+Algorithm 1 line-by-line mapping (comments in :meth:`DCS3GD.step`).
 
 The first iteration of Algorithm 1 (plain step before the loop) is
 reproduced by initializing ``delta_prev = 0``: then ``Δ̄w = 0``, ``D_i = 0``,
 the correction vanishes and the step degenerates to plain momentum SGD —
 identical on all workers, exactly the algorithm's prologue.
+
+The module-level ``init`` / ``dc_s3gd_step`` / ``average_params`` /
+``worker_spread`` functions are **deprecated shims** over the class
+(kept for one PR); new code goes through ``registry.make("dc_s3gd", cfg)``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.correction import dc_correct
+from repro.core import registry
+from repro.core.api import LossFn, Metrics, TrainState
 from repro.core.types import DCS3GDConfig
-from repro.optim.local import init_local_state, local_update
+from repro.optim import local as local_opt
 from repro.optim.schedules import linear_warmup_linear_decay
 
 PyTree = Any
 
 
 class DCS3GDState(NamedTuple):
+    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
+
     params: PyTree       # (W, ...) per-worker weights w_i
     opt: PyTree          # (W, ...) local optimizer slots (momentum m_i)
     delta_prev: PyTree   # (W, ...) Δw_i^{t-1} — the in-flight all-reduce payload
@@ -48,19 +63,6 @@ def replicate_for_workers(params: PyTree, n_workers: int) -> PyTree:
     """w_i = w̄ for every worker (Algorithm 1 'Initialize')."""
     return jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params)
-
-
-def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCS3GDState:
-    wp = replicate_for_workers(params, n_workers)
-    sdt = jnp.dtype(cfg.state_dtype)
-    opt = init_local_state(wp, cfg.local_optimizer)
-    opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
-    return DCS3GDState(
-        params=wp,
-        opt=opt,
-        delta_prev=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=sdt), wp),
-        step=jnp.zeros((), jnp.int32),
-    )
 
 
 def schedules(step, cfg: DCS3GDConfig):
@@ -78,51 +80,160 @@ def schedules(step, cfg: DCS3GDConfig):
     return lr, wd
 
 
-def dc_s3gd_step(state: DCS3GDState, batch: PyTree, *,
-                 loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
-                 cfg: DCS3GDConfig,
-                 use_fused_kernels: bool = False,
-                 ) -> Tuple[DCS3GDState, dict]:
-    """One DC-S3GD iteration for all workers at once.
+@registry.register(registry.ALGORITHM, "dc_s3gd")
+class DCS3GD:
+    """Algorithm 1 as a composition of protocol pieces.
 
-    ``batch`` leaves are (W, per_worker_batch, ...).  ``loss_fn(params_i,
-    batch_i)`` is the per-worker loss; gradients are vmapped over workers.
-
-    ``use_fused_kernels=True`` replaces the correction+momentum+Eq.12 tail
-    with the Pallas kernels (`repro.kernels`): one pass for both Eq. 17
-    norms and one read-4/write-3 pass for the update (momentum optimizer +
-    global lambda mode only).
+    ``local_optimizer`` / ``reducer`` / ``compensator`` accept a registered
+    name or an object; defaults come from ``cfg`` (``cfg.local_optimizer``,
+    mean all-reduce, Eq. 10+17 compensation).  ``use_kernels`` routes the
+    correction+momentum+Eq.12 tail through the fused Pallas kernels
+    (`repro.kernels`) — momentum + global-lambda mode only.
     """
-    n_workers = jax.tree.leaves(state.params)[0].shape[0]
-    lr, wd = schedules(state.step, cfg)
-    comm_dtype = jnp.dtype(cfg.comm_dtype)
 
-    # --- MPI_Iallreduce(Δw_i): mean over workers.  Depends only on carried
-    # state, NOT on this step's gradients -> overlappable by the scheduler.
-    delta_bar = jax.tree.map(
-        lambda d: jnp.mean(d.astype(comm_dtype), axis=0, keepdims=True)
-        .astype(jnp.float32),
-        state.delta_prev)
+    name = "dc_s3gd"
+    worker_sharded = True
 
-    # --- g_i = ∇l(w_i): per-worker gradients (the "compute" being overlapped)
-    grads, loss = _vgrads(loss_fn, state.params, batch, cfg.microbatches)
+    def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
+                 local_optimizer=None, reducer=None, compensator=None,
+                 use_kernels: bool = False):
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.local_optimizer = (
+            local_opt.from_config(cfg) if local_optimizer is None
+            else registry.make_local_optimizer(local_optimizer, cfg))
+        self.reducer = registry.make_reducer(
+            "mean_allreduce" if reducer is None else reducer, cfg)
+        self.compensator = registry.make_compensator(
+            "dc" if compensator is None else compensator, cfg)
+        self.use_kernels = use_kernels
 
-    # --- MPI_Wait() / D_i = (1/N)·Δ̄w − Δw_i  (Eq. 9)
-    D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
-                     delta_bar, state.delta_prev)
+    # -- protocol -----------------------------------------------------------
 
-    if use_fused_kernels:
-        assert cfg.local_optimizer == "momentum" and not cfg.nesterov \
-            and cfg.lambda_norm == "global", \
+    @property
+    def _reduces_weights(self) -> bool:
+        return bool(getattr(self.reducer, "reduces_weights", False))
+
+    def init(self, params: PyTree) -> TrainState:
+        cfg = self.cfg
+        wp = replicate_for_workers(params, self.n_workers)
+        sdt = jnp.dtype(cfg.state_dtype)
+        opt = self.local_optimizer.init(wp)
+        opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
+        # weight-mixing reducers never read the carried deltas — don't
+        # spend a params-sized (W, ...) tree on dead comm state
+        comm = {} if self._reduces_weights else {
+            "delta_prev": jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=sdt), wp)}
+        return TrainState(params=wp, opt=opt, comm=comm,
+                          step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: TrainState, batch: PyTree, *, loss_fn: LossFn
+             ) -> Tuple[TrainState, Metrics]:
+        """One DC-S3GD iteration for all workers at once.
+
+        ``batch`` leaves are (W, per_worker_batch, ...).  ``loss_fn(
+        params_i, batch_i)`` is the per-worker loss; gradients are vmapped
+        over workers.
+        """
+        cfg = self.cfg
+        lr, wd = schedules(state.step, cfg)
+        sched = {"lr": lr, "weight_decay": wd}
+
+        # --- MPI_Iallreduce: pluggable reduction over workers.  Depends
+        # only on carried state, NOT on this step's gradients ->
+        # overlappable by the scheduler.  Mean-style reducers consume the
+        # deltas (the paper's wire format — valid because the global mean
+        # keeps the Eq. 12 base common); neighborhood reducers
+        # (reduces_weights) mix the weights themselves, D-PSGD-style.
+        if self._reduces_weights:
+            w_red = self.reducer(state.params)
+        else:
+            delta_prev = state.comm["delta_prev"]
+            delta_bar = self.reducer(delta_prev)
+
+        # --- g_i = ∇l(w_i): per-worker gradients (the compute overlapped)
+        grads, loss = _vgrads(loss_fn, state.params, batch, cfg.microbatches)
+
+        # --- MPI_Wait() / D_i = (1/N)·Δ̄w − Δw_i  (Eq. 9); for weight
+        # reducers D_i = R(w)_i − w_i directly (same quantity: distance
+        # from my weights to my reduction target)
+        if self._reduces_weights:
+            D = jax.tree.map(lambda rw, w: rw - w.astype(jnp.float32),
+                             w_red, state.params)
+        else:
+            D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
+                             delta_bar, delta_prev)
+
+        if self.use_kernels:
+            return self._fused_tail(state, grads, D, loss, lr, wd)
+
+        # --- g̃_i = g_i + λ_i g_i⊙g_i⊙D_i  (Eq. 10 + 17)
+        g_t, lam = self.compensator(grads, D, axis0_is_worker=True)
+
+        # --- Δw_i = U(g̃_i, η, μ)  (Eq. 11)
+        delta, opt = self.local_optimizer(g_t, state.opt, state.params,
+                                          sched)
+
+        # --- w_i = w_i + D_i + Δw_i  (Eq. 12: move toward the average +
+        # corrected update in one pass)
+        new_params = jax.tree.map(
+            lambda w, d_i, dw: (w.astype(jnp.float32) + d_i
+                                + dw.astype(jnp.float32)).astype(w.dtype),
+            state.params, D, delta)
+
+        sdt = jnp.dtype(cfg.state_dtype)
+        opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
+        metrics = {
+            "loss": jnp.mean(loss),
+            "lr": lr,
+            "wd": wd,
+            "lambda": jnp.mean(lam) if not isinstance(lam, dict) else
+            jnp.mean(jnp.stack([jnp.mean(v) for v in jax.tree.leaves(lam)])),
+            "distance_norm": _mean_worker_norm(D),
+            "delta_norm": _mean_worker_norm(delta),
+        }
+        return TrainState(new_params, opt, self._comm(delta, sdt),
+                          state.step + 1), metrics
+
+    def _comm(self, delta: PyTree, sdt) -> PyTree:
+        if self._reduces_weights:
+            return {}
+        return {"delta_prev": jax.tree.map(lambda d: d.astype(sdt), delta)}
+
+    def eval_params(self, state: TrainState) -> PyTree:
+        """w̄ for evaluation (paper Eq. 8 / averaging-in-parameter-space)."""
+        return jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), state.params)
+
+    def spread(self, state: TrainState) -> jnp.ndarray:
+        """Mean Euclidean distance of workers from the average — the
+        quantity the paper argues grows slowly with N (§III-D.2)."""
+        avg = self.eval_params(state)
+        sq = sum(jax.tree.leaves(jax.tree.map(
+            lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32) - a[None]),
+                                 axis=tuple(range(1, p.ndim))),
+            state.params, avg)))
+        return jnp.mean(jnp.sqrt(sq))
+
+    # -- fused Pallas tail --------------------------------------------------
+
+    def _fused_tail(self, state: TrainState, grads, D, loss, lr, wd
+                    ) -> Tuple[TrainState, Metrics]:
+        cfg = self.cfg
+        assert self.local_optimizer.name == "momentum" \
+            and not getattr(self.local_optimizer, "nesterov", False) \
+            and getattr(self.compensator, "mode", "global") == "global", \
             "fused kernel path: momentum + global-lambda only"
         from repro.kernels import ops as kops
+        lambda0 = self.compensator.lambda0
+        mu = self.local_optimizer.momentum
 
         def per_worker(g_i, d_i, m_i, w_i):
             gsq, csq = kops.dc_norms_tree(g_i, d_i)
-            lam_i = kops.dc_lambda(gsq, csq, cfg.lambda0)
+            lam_i = kops.dc_lambda(gsq, csq, lambda0)
             w_n, m_n, dw = kops.dc_fused_update_tree(
-                g_i, d_i, m_i, w_i, lam=lam_i, mu=cfg.momentum, eta=lr,
-                wd=wd)
+                g_i, d_i, m_i, w_i, lam=lam_i, mu=mu, eta=lr, wd=wd)
             return w_n, m_n, dw, lam_i
 
         new_params, m_new, delta_f32, lam = jax.vmap(per_worker)(
@@ -134,40 +245,23 @@ def dc_s3gd_step(state: DCS3GDState, batch: PyTree, *,
             "distance_norm": _mean_worker_norm(D),
             "delta_norm": _mean_worker_norm(delta_f32),
         }
-        return (DCS3GDState(new_params,
-                            jax.tree.map(lambda x: x.astype(sdt), {"m": m_new}),
-                            jax.tree.map(lambda x: x.astype(sdt), delta_f32),
-                            state.step + 1), metrics)
+        opt = jax.tree.map(lambda x: x.astype(sdt), {"m": m_new})
+        return TrainState(new_params, opt, self._comm(delta_f32, sdt),
+                          state.step + 1), metrics
 
-    # --- g̃_i = g_i + λ_i g_i⊙g_i⊙D_i  (Eq. 10 + 17)
-    g_t, lam = dc_correct(grads, D, cfg.lambda0, mode=cfg.lambda_norm,
-                          axis0_is_worker=True)
 
-    # --- Δw_i = U(g̃_i, η, μ)  (Eq. 11)
-    upd = local_update(cfg.local_optimizer)
-    delta, opt = upd(g_t, state.opt, state.params, lr=lr,
-                     momentum=cfg.momentum, weight_decay=wd,
-                     nesterov=cfg.nesterov)
+@registry.register(registry.ALGORITHM, "stale")
+def _make_stale(cfg: DCS3GDConfig, **kw) -> DCS3GD:
+    """Uncompensated stale-synchronous SGD: DC-S3GD with λ0 = 0."""
+    kw.setdefault("compensator", "none")
+    alg = DCS3GD(dataclasses.replace(cfg, lambda0=0.0), **kw)
+    alg.name = "stale"
+    return alg
 
-    # --- w_i = w_i + D_i + Δw_i  (Eq. 12: move to average + corrected update)
-    new_params = jax.tree.map(
-        lambda w, d_i, dw: (w.astype(jnp.float32) + d_i
-                            + dw.astype(jnp.float32)).astype(w.dtype),
-        state.params, D, delta)
 
-    sdt = jnp.dtype(cfg.state_dtype)
-    delta_store = jax.tree.map(lambda d: d.astype(sdt), delta)
-    opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
-    metrics = {
-        "loss": jnp.mean(loss),
-        "lr": lr,
-        "wd": wd,
-        "lambda": jnp.mean(lam) if not isinstance(lam, dict) else
-        jnp.mean(jnp.stack([jnp.mean(v) for v in jax.tree.leaves(lam)])),
-        "distance_norm": _mean_worker_norm(D),
-        "delta_norm": _mean_worker_norm(delta),
-    }
-    return DCS3GDState(new_params, opt, delta_store, state.step + 1), metrics
+# ---------------------------------------------------------------------------
+# shared step internals (used by the class and by SSGD)
+# ---------------------------------------------------------------------------
 
 
 def _vgrads(loss_fn, params, batch, microbatches: int = 1):
@@ -211,15 +305,47 @@ def _mean_worker_norm(tree: PyTree) -> jnp.ndarray:
     return jnp.mean(jnp.sqrt(sq))
 
 
-def average_params(state: DCS3GDState) -> PyTree:
-    """w̄ for evaluation (paper Eq. 8 / averaging-in-parameter-space)."""
+# ---------------------------------------------------------------------------
+# deprecated shims (pre-registry surface; removed next PR)
+# ---------------------------------------------------------------------------
+
+
+def _to_legacy(state: TrainState) -> DCS3GDState:
+    return DCS3GDState(state.params, state.opt, state.comm["delta_prev"],
+                       state.step)
+
+
+def _from_legacy(state: DCS3GDState) -> TrainState:
+    return TrainState(state.params, state.opt,
+                      {"delta_prev": state.delta_prev}, state.step)
+
+
+def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCS3GDState:
+    """Deprecated: use ``registry.make("dc_s3gd", cfg, n_workers=W).init``."""
+    return _to_legacy(DCS3GD(cfg, n_workers=n_workers).init(params))
+
+
+def dc_s3gd_step(state: DCS3GDState, batch: PyTree, *,
+                 loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
+                 cfg: DCS3GDConfig,
+                 use_fused_kernels: bool = False,
+                 ) -> Tuple[DCS3GDState, dict]:
+    """Deprecated: use ``registry.make("dc_s3gd", cfg, ...).step``."""
+    n_workers = jax.tree.leaves(state.params)[0].shape[0]
+    alg = DCS3GD(cfg, n_workers=n_workers, use_kernels=use_fused_kernels)
+    new_state, metrics = alg.step(_from_legacy(state), batch,
+                                  loss_fn=loss_fn)
+    return _to_legacy(new_state), metrics
+
+
+def average_params(state) -> PyTree:
+    """Deprecated: use ``alg.eval_params(state)``."""
     return jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0),
                         state.params)
 
 
-def worker_spread(state: DCS3GDState) -> jnp.ndarray:
-    """Mean Euclidean distance of workers from the average — the quantity the
-    paper argues grows slowly with N (§III-D.2)."""
+def worker_spread(state) -> jnp.ndarray:
+    """Deprecated: use ``alg.spread(state)``."""
     avg = average_params(state)
     sq = sum(jax.tree.leaves(jax.tree.map(
         lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32) - a[None]),

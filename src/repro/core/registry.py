@@ -1,0 +1,111 @@
+"""Registries: algorithms, local optimizers, reducers, compensators.
+
+Call sites construct everything from config strings — never by importing
+an algorithm module:
+
+    registry.make("dc_s3gd", cfg, n_workers=32)            # Algorithm 1
+    registry.make("stale",   cfg, n_workers=32)            # lambda0 = 0
+    registry.make("ssgd",    cfg)                          # sync baseline
+    registry.make("dc_asgd", cfg, n_workers=32)            # PS simulator
+
+    registry.make("dc_s3gd", cfg, n_workers=32,
+                  reducer="gossip", use_kernels=True)
+
+Component factories (``make_local_optimizer`` / ``make_reducer`` /
+``make_compensator``) accept either a registered name or an
+already-constructed object, so algorithms compose freely.
+
+Provider modules register themselves at import via the ``@register``
+decorator; ``make`` lazily imports the known providers on a miss, so
+importing this module never pulls in the algorithm code (no cycles).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+ALGORITHM = "algorithm"
+LOCAL_OPTIMIZER = "local_optimizer"
+REDUCER = "reducer"
+COMPENSATOR = "compensator"
+
+_REGISTRY: Dict[str, Dict[str, Callable[..., Any]]] = {
+    ALGORITHM: {}, LOCAL_OPTIMIZER: {}, REDUCER: {}, COMPENSATOR: {},
+}
+
+# imported lazily, once, the first time a lookup misses
+_PROVIDERS = (
+    "repro.core.reduce",
+    "repro.core.compensate",
+    "repro.optim.local",
+    "repro.core.dc_s3gd",
+    "repro.core.ssgd",
+    "repro.core.dc_asgd",
+)
+_loaded = False
+
+
+def register(kind: str, name: str):
+    """Class/function decorator: ``@register(ALGORITHM, "dc_s3gd")``."""
+    if kind not in _REGISTRY:
+        raise KeyError(f"unknown registry kind {kind!r}")
+
+    def deco(factory):
+        _REGISTRY[kind][name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_loaded() -> None:
+    global _loaded
+    if not _loaded:
+        for mod in _PROVIDERS:
+            importlib.import_module(mod)
+        # only after every provider imported cleanly: a failed import must
+        # re-raise on the next call, not decay into "unknown name" KeyErrors
+        _loaded = True
+
+
+def _lookup(kind: str, name: str):
+    _ensure_loaded()
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        raise KeyError(f"unknown {kind} {name!r}; "
+                       f"have {sorted(_REGISTRY[kind])}") from None
+
+
+def names(kind: str = ALGORITHM) -> Tuple[str, ...]:
+    _ensure_loaded()
+    return tuple(sorted(_REGISTRY[kind]))
+
+
+def make(name: str, cfg, **kwargs):
+    """Build a `DistributedOptimizer` from config.
+
+    ``cfg`` is a `repro.core.types.DCS3GDConfig`; per-algorithm keyword
+    arguments (``n_workers``, ``reducer``, ``local_optimizer``,
+    ``compensator``, ``use_kernels``) pass through to the factory.
+    """
+    return _lookup(ALGORITHM, name)(cfg, **kwargs)
+
+
+def make_local_optimizer(spec, cfg=None):
+    """Name (or object) -> `LocalOptimizer`.  With ``cfg``, hyper-params
+    (momentum, nesterov) come from the config."""
+    if not isinstance(spec, str):
+        return spec
+    return _lookup(LOCAL_OPTIMIZER, spec)(cfg)
+
+
+def make_reducer(spec, cfg=None):
+    if not isinstance(spec, str):
+        return spec
+    return _lookup(REDUCER, spec)(cfg)
+
+
+def make_compensator(spec, cfg=None):
+    if not isinstance(spec, str):
+        return spec
+    return _lookup(COMPENSATOR, spec)(cfg)

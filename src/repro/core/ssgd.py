@@ -3,6 +3,11 @@
 Identical weights on every worker; the gradient all-reduce is on the
 critical path (the update depends on *this* step's gradients), so the step
 time is t_C + t_ARed (paper Eq. 13) — the thing DC-S3GD removes.
+
+`SSGD` composes the same `LocalOptimizer` / `Reducer` pieces as DC-S3GD
+over the generic `TrainState` (no worker axis on state leaves, ``comm`` is
+empty) and registers as ``"ssgd"``.  The module-level ``init`` /
+``ssgd_step`` are deprecated shims kept for one PR.
 """
 from __future__ import annotations
 
@@ -11,43 +16,96 @@ from typing import Any, Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
+from repro.core.api import LossFn, Metrics, TrainState
 from repro.core.dc_s3gd import schedules
+from repro.core.reduce import collapse_worker_axis
 from repro.core.types import DCS3GDConfig
-from repro.optim.local import init_local_state, local_update
+from repro.optim import local as local_opt
 
 PyTree = Any
 
 
 class SSGDState(NamedTuple):
+    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
+
     params: PyTree   # replicated (no worker axis)
     opt: PyTree
     step: jnp.ndarray
 
 
+@registry.register(registry.ALGORITHM, "ssgd")
+class SSGD:
+    """Synchronous data-parallel SGD through the protocol.
+
+    ``batch`` leaves are (W, per_worker_batch, ...) like DC-S3GD, but
+    params are shared: grads go through the `Reducer` *before* the update
+    (the blocking all-reduce).  ``n_workers`` is accepted for interface
+    uniformity; the worker count is carried by the batch.
+    """
+
+    name = "ssgd"
+    worker_sharded = False
+
+    def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
+                 local_optimizer=None, reducer=None, **_ignored):
+        self.cfg = cfg
+        self.n_workers = n_workers
+        self.local_optimizer = (
+            local_opt.from_config(cfg) if local_optimizer is None
+            else registry.make_local_optimizer(local_optimizer, cfg))
+        self.reducer = registry.make_reducer(
+            "mean_allreduce" if reducer is None else reducer, cfg)
+
+    def init(self, params: PyTree) -> TrainState:
+        return TrainState(params=params,
+                          opt=self.local_optimizer.init(params),
+                          comm={}, step=jnp.zeros((), jnp.int32))
+
+    def step(self, state: TrainState, batch: PyTree, *, loss_fn: LossFn
+             ) -> Tuple[TrainState, Metrics]:
+        cfg = self.cfg
+        lr, wd = schedules(state.step, cfg)
+        vg = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))
+        loss, grads = vg(state.params, batch)
+        # blocking all-reduce: reduce over workers — on the critical path.
+        # collapse_worker_axis folds the reducer's broadcastable output
+        # ((1, ...) for the mean, (W, ...) for gossip) back to canonical
+        # shapes; for the mean reducer this is bitwise the seed behaviour.
+        grads = collapse_worker_axis(
+            self.reducer(jax.tree.map(lambda g: g.astype(jnp.float32),
+                                      grads)))
+        delta, opt = self.local_optimizer(grads, state.opt, state.params,
+                                          {"lr": lr, "weight_decay": wd})
+        new_params = jax.tree.map(
+            lambda w, dw: (w.astype(jnp.float32)
+                           + dw.astype(jnp.float32)).astype(w.dtype),
+            state.params, delta)
+        return (TrainState(new_params, opt, {}, state.step + 1),
+                {"loss": jnp.mean(loss), "lr": lr, "wd": wd})
+
+    def eval_params(self, state: TrainState) -> PyTree:
+        return state.params
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims (pre-registry surface; removed next PR)
+# ---------------------------------------------------------------------------
+
+
 def init(params: PyTree, cfg: DCS3GDConfig) -> SSGDState:
-    return SSGDState(params, init_local_state(params, cfg.local_optimizer),
-                     jnp.zeros((), jnp.int32))
+    """Deprecated: use ``registry.make("ssgd", cfg).init``."""
+    st = SSGD(cfg).init(params)
+    return SSGDState(st.params, st.opt, st.step)
 
 
 def ssgd_step(state: SSGDState, batch: PyTree, *,
               loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
               cfg: DCS3GDConfig) -> Tuple[SSGDState, dict]:
-    """``batch`` leaves are (W, per_worker_batch, ...) like DC-S3GD, but
-    params are shared: grads are averaged over the worker axis *before* the
-    update (the blocking all-reduce)."""
-    lr, wd = schedules(state.step, cfg)
-    vg = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))
-    loss, grads = vg(state.params, batch)
-    # blocking all-reduce: mean over workers — on the critical path
-    grads = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0),
-                         grads)
-    upd = local_update(cfg.local_optimizer)
-    delta, opt = upd(grads, state.opt, state.params, lr=lr,
-                     momentum=cfg.momentum, weight_decay=wd,
-                     nesterov=cfg.nesterov)
-    new_params = jax.tree.map(
-        lambda w, dw: (w.astype(jnp.float32)
-                       + dw.astype(jnp.float32)).astype(w.dtype),
-        state.params, delta)
-    return (SSGDState(new_params, opt, state.step + 1),
-            {"loss": jnp.mean(loss), "lr": lr, "wd": wd})
+    """Deprecated: use ``registry.make("ssgd", cfg).step``."""
+    alg = SSGD(cfg)
+    new_state, metrics = alg.step(
+        TrainState(state.params, state.opt, {}, state.step), batch,
+        loss_fn=loss_fn)
+    return SSGDState(new_state.params, new_state.opt,
+                     new_state.step), metrics

@@ -1,0 +1,1 @@
+"""Drivers: train / serve / dryrun, mesh + sharding-spec builders."""

@@ -18,7 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.analysis import roofline as rl                    # noqa: E402
 from repro.configs import ARCHS, get_config                  # noqa: E402
-from repro.core import dc_s3gd, ssgd                         # noqa: E402
+from repro.core import registry                              # noqa: E402
 from repro.core.types import DCS3GDConfig, INPUT_SHAPES      # noqa: E402
 from repro.launch import specs as S                          # noqa: E402
 from repro.launch.mesh import (make_production_mesh, n_workers,  # noqa: E402
@@ -51,26 +51,27 @@ def _maybe_axes(axes, size: int, mesh) -> tuple:
 
 
 def build_train(cfg, shape, mesh, dc_cfg, algo: str):
-    """Returns (step_fn, abstract args, in/out shardings)."""
+    """Returns (step_fn, abstract args, in/out shardings).  ``algo`` is any
+    registered `DistributedOptimizer` name — the registry-built object
+    declares its own worker sharding."""
     model = Model(cfg, remat=True,
                   seq_parallel=bool(os.environ.get("DRYRUN_SEQ_PARALLEL")))
     W = n_workers(mesh)
     waxes = worker_axes(mesh)
     wa = waxes if len(waxes) > 1 else waxes[0]
-    state = S.abstract_train_state(model, W, dc_cfg, algo)
+    alg = registry.make(algo, dc_cfg, n_workers=W,
+                        reducer=os.environ.get("DRYRUN_REDUCER",
+                                               "mean_allreduce"))
+    state = S.abstract_train_state(model, W, dc_cfg, alg)
     batch = S.train_batch_specs(cfg, shape, W)
     ms = mesh.shape["model"]
 
     st_spec = state_specs(cfg, state, model_size=ms,
-                          worker_axes=wa if algo == "dc_s3gd" else None)
+                          worker_axes=wa if alg.worker_sharded else None)
     b_spec = batch_specs(cfg, batch, worker_axes=wa)
 
-    if algo == "dc_s3gd":
-        def step(st, bt):
-            return dc_s3gd.dc_s3gd_step(st, bt, loss_fn=model.loss, cfg=dc_cfg)
-    else:
-        def step(st, bt):
-            return ssgd.ssgd_step(st, bt, loss_fn=model.loss, cfg=dc_cfg)
+    def step(st, bt):
+        return alg.step(st, bt, loss_fn=model.loss)
 
     in_sh = (_sharding_tree(mesh, st_spec), _sharding_tree(mesh, b_spec))
     out_sh = (_sharding_tree(mesh, st_spec), None)
@@ -157,7 +158,11 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, algo: str = "dc_s3gd"
         step, args, in_sh, out_sh = build_decode(cfg, shape, mesh)
         donate = (1,)
 
-    with jax.sharding.set_mesh(mesh):
+    # jax >= 0.5 spells the mesh context jax.sharding.set_mesh; older
+    # releases use the Mesh object itself as the context manager
+    mesh_ctx = (jax.sharding.set_mesh(mesh)
+                if hasattr(jax.sharding, "set_mesh") else mesh)
+    with mesh_ctx:
         jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
@@ -214,7 +219,7 @@ def main(argv=None):
     ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
     ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
     ap.add_argument("--mesh", choices=("pod", "multipod"), default="pod")
-    ap.add_argument("--algo", choices=("dc_s3gd", "ssgd"), default="dc_s3gd")
+    ap.add_argument("--algo", choices=registry.names(), default="dc_s3gd")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) on the given mesh")
     ap.add_argument("--out", type=Path, default=Path("experiments/dryrun"))

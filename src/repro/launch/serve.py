@@ -5,16 +5,25 @@ production mesh with the cache/param shardings from `repro.parallel`.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+
+To serve weights produced by the training driver, point ``--train-ckpt``
+at a `repro.launch.train` checkpoint; the matching `DistributedOptimizer`
+is rebuilt via `repro.core.registry` and its ``eval_params`` (e.g. the
+DC-S3GD worker average, paper Eq. 8) become the served weights.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import restore_pytree
 from repro.configs import ARCHS, get_config, reduced
+from repro.core import registry
+from repro.core.types import DCS3GDConfig
 from repro.models.transformer import Model
 
 
@@ -54,6 +63,20 @@ def generate(model: Model, params, prompts: jnp.ndarray, *, gen: int,
     return jnp.stack(out, axis=1)
 
 
+def params_from_train_ckpt(model: Model, path, *, algo: str, n_workers: int,
+                           local_optimizer: str = "momentum",
+                           reducer: str = "mean_allreduce") -> jnp.ndarray:
+    """Restore a `repro.launch.train` checkpoint and extract the served
+    weights through the registry-built algorithm's ``eval_params``.
+    ``local_optimizer`` and ``reducer`` must match training (they shape
+    the opt slots and the comm state respectively)."""
+    cfg = DCS3GDConfig(local_optimizer=local_optimizer)
+    alg = registry.make(algo, cfg, n_workers=n_workers, reducer=reducer)
+    template = alg.init(model.init(jax.random.PRNGKey(0)))
+    state = restore_pytree(path, template)
+    return alg.eval_params(state)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
@@ -63,6 +86,18 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-ckpt", type=Path, default=None,
+                    help="serve eval_params of a training checkpoint")
+    ap.add_argument("--algo", choices=registry.names(), default="dc_s3gd",
+                    help="algorithm that produced --train-ckpt")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="worker count of --train-ckpt")
+    ap.add_argument("--local-optimizer", default="momentum",
+                    choices=registry.names(registry.LOCAL_OPTIMIZER),
+                    help="local optimizer --train-ckpt was trained with")
+    ap.add_argument("--reducer", default="mean_allreduce",
+                    choices=registry.names(registry.REDUCER),
+                    help="reducer --train-ckpt was trained with")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -70,7 +105,16 @@ def main(argv=None):
         cfg = reduced(cfg)
     model = Model(cfg, remat=False, q_chunk=64, kv_chunk=64, scan_chunk=64)
     key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
+    if args.train_ckpt is not None:
+        params = params_from_train_ckpt(model, args.train_ckpt,
+                                        algo=args.algo,
+                                        n_workers=args.workers,
+                                        local_optimizer=args.local_optimizer,
+                                        reducer=args.reducer)
+        print(f"[serve] weights from {args.train_ckpt} "
+              f"(algo={args.algo}, eval_params)")
+    else:
+        params = model.init(key)
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

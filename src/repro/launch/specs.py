@@ -113,12 +113,12 @@ def abstract_params(model: Model) -> PyTree:
 
 def abstract_train_state(model: Model, n_workers: int, dc_cfg: DCS3GDConfig,
                          algo: str = "dc_s3gd") -> PyTree:
-    import repro.core.dc_s3gd as dc
-    import repro.core.ssgd as ssgd
-    params = abstract_params(model)
-    if algo == "dc_s3gd":
-        return jax.eval_shape(lambda p: dc.init(p, n_workers, dc_cfg), params)
-    return jax.eval_shape(lambda p: ssgd.init(p, dc_cfg), params)
+    """Abstract `TrainState` for the registry-built algorithm ``algo``
+    (a name or an already-constructed `DistributedOptimizer`)."""
+    from repro.core import registry
+    alg = algo if not isinstance(algo, str) else \
+        registry.make(algo, dc_cfg, n_workers=n_workers)
+    return jax.eval_shape(alg.init, abstract_params(model))
 
 
 def abstract_cache(model: Model, shape: InputShape) -> PyTree:

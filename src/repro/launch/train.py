@@ -1,27 +1,30 @@
 """End-to-end training driver.
 
-Runs DC-S3GD (or the SSGD / uncompensated-stale baselines) for real steps on
-whatever devices exist — a ~100M-param config on CPU for the example run, or
-the production mesh on a pod (same code path; the mesh just grows).
+Runs any registered `DistributedOptimizer` (DC-S3GD, the SSGD / stale
+baselines, the DC-ASGD simulator) for real steps on whatever devices
+exist — a ~100M-param config on CPU for the example run, or the
+production mesh on a pod (same code path; the mesh just grows).  The
+algorithm, its local optimizer, reducer, and compensator are all selected
+from config via `repro.core.registry` — this module knows no algorithm
+internals.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
-      --reduced --steps 200 --workers 4 --batch-per-worker 8 --seq 128
+      --reduced --steps 200 --workers 4 --batch-per-worker 8 --seq 128 \
+      --algo dc_s3gd --reducer mean_allreduce
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from functools import partial
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import restore_pytree, save_pytree
 from repro.configs import ARCHS, get_config, reduced
-from repro.core import dc_s3gd, ssgd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.data import SyntheticLMDataset, worker_batches
 from repro.models.transformer import Model
@@ -32,9 +35,14 @@ def build_argparser():
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
-    ap.add_argument("--algo", choices=("dc_s3gd", "ssgd", "stale"),
-                    default="dc_s3gd",
+    ap.add_argument("--algo", choices=registry.names(), default="dc_s3gd",
                     help="'stale' = DC-S3GD with lambda0=0 (no compensation)")
+    ap.add_argument("--reducer", choices=registry.names(registry.REDUCER),
+                    default="mean_allreduce",
+                    help="cross-worker reduce topology")
+    ap.add_argument("--local-optimizer", default=None,
+                    choices=registry.names(registry.LOCAL_OPTIMIZER),
+                    help="override cfg.local_optimizer")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch-per-worker", type=int, default=8)
@@ -61,10 +69,10 @@ def run(args) -> dict:
                   q_chunk=64, kv_chunk=64, scan_chunk=64, loss_chunk=256)
 
     dc_cfg = DCS3GDConfig(
-        learning_rate=args.lr, momentum=args.momentum,
-        lambda0=(0.0 if args.algo == "stale" else args.lambda0),
+        learning_rate=args.lr, momentum=args.momentum, lambda0=args.lambda0,
         warmup_steps=max(int(args.warmup_frac * args.steps), 1),
         total_steps=args.steps,
+        local_optimizer=args.local_optimizer or "momentum",
     )
 
     key = jax.random.PRNGKey(args.seed)
@@ -73,16 +81,11 @@ def run(args) -> dict:
 
     data = SyntheticLMDataset(cfg.vocab_size, args.seq, seed=args.seed)
 
-    if args.algo in ("dc_s3gd", "stale"):
-        state = dc_s3gd.init(params, args.workers, dc_cfg)
-        step_fn = jax.jit(partial(dc_s3gd.dc_s3gd_step, loss_fn=model.loss,
-                                  cfg=dc_cfg,
-                                  use_fused_kernels=args.use_kernels),
-                          donate_argnums=0)
-    else:
-        state = ssgd.init(params, dc_cfg)
-        step_fn = jax.jit(partial(ssgd.ssgd_step, loss_fn=model.loss,
-                                  cfg=dc_cfg), donate_argnums=0)
+    alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
+                        reducer=args.reducer, use_kernels=args.use_kernels)
+    state = alg.init(params)
+    step_fn = jax.jit(partial(alg.step, loss_fn=model.loss),
+                      donate_argnums=0)
 
     start = 0
     if args.resume and Path(args.resume).exists():
@@ -90,7 +93,8 @@ def run(args) -> dict:
         start = int(state.step)
         print(f"[train] resumed from {args.resume} at step {start}")
 
-    print(f"[train] {cfg.name} ({n_params/1e6:.1f}M params) algo={args.algo} "
+    print(f"[train] {cfg.name} ({n_params/1e6:.1f}M params) algo={alg.name} "
+          f"reducer={alg.reducer.name if hasattr(alg, 'reducer') else '-'} "
           f"W={args.workers} b={args.batch_per_worker} seq={args.seq}")
 
     history = []

@@ -1,0 +1,1 @@
+"""Model zoo: transformer (dense/MoE/SSM/hybrid/encdec/VLM), CNN."""

@@ -1,8 +1,10 @@
-from repro.optim.local import (adam_update, init_local_state, lars_update,
-                               local_update, momentum_update)
+from repro.optim.local import (Adam, LARS, Momentum, Nesterov, adam_update,
+                               init_local_state, lars_update, local_update,
+                               momentum_update)
 from repro.optim.schedules import linear_warmup_linear_decay
 
 __all__ = [
+    "Adam", "LARS", "Momentum", "Nesterov",
     "adam_update", "init_local_state", "lars_update", "local_update",
     "momentum_update", "linear_warmup_linear_decay",
 ]

@@ -5,6 +5,17 @@ The paper uses momentum SGD (with the decoupled, scheduled weight decay of
 ``delta_w`` (to be added to the weights) plus the new optimizer slots, so
 they compose with the DC-S3GD step (Eq. 11: Δw_i = U(g̃_i, η, μ)).
 
+Two surfaces over the same math:
+
+* the update *functions* (``momentum_update`` / ``lars_update`` /
+  ``adam_update``) — the original keyword-argument API;
+* `LocalOptimizer` *objects* (``Momentum`` / ``Nesterov`` / ``LARS`` /
+  ``Adam``) with the uniform protocol contract
+  ``(grads, slots, params, schedules) -> (delta, slots)`` where
+  ``schedules`` carries the traced per-step scalars ({"lr", "weight_decay"})
+  and static hyper-parameters live on the object.  These register under
+  `repro.core.registry` and are what the algorithm classes compose.
+
 Weight-decay masking: norm/bias-like parameters (rank-1 leaves) are excluded,
 matching the paper ("weight decay was applied to all weights, with the
 exception of those belonging to batch normalization layers").
@@ -15,6 +26,9 @@ from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import registry
+from repro.core.api import Schedules
 
 PyTree = Any
 
@@ -101,3 +115,93 @@ def adam_update(grads: PyTree, state: PyTree, params: PyTree, *,
 def local_update(name: str):
     return {"momentum": momentum_update, "lars": lars_update,
             "adam": adam_update}[name]
+
+
+# ---------------------------------------------------------------------------
+# LocalOptimizer objects (the protocol surface; see repro.core.api)
+# ---------------------------------------------------------------------------
+
+
+@registry.register(registry.LOCAL_OPTIMIZER, "momentum")
+class Momentum:
+    """Momentum SGD (paper §IV-A).  Delegates to `momentum_update`.
+    ``cfg.nesterov`` is honoured (so ``local_optimizer="momentum"`` and the
+    from-config default behave identically)."""
+
+    name = "momentum"
+
+    def __init__(self, cfg=None, *, momentum: float | None = None,
+                 nesterov: bool | None = None):
+        self.momentum = momentum if momentum is not None else \
+            (cfg.momentum if cfg is not None else 0.9)
+        self.nesterov = nesterov if nesterov is not None else \
+            bool(getattr(cfg, "nesterov", False))
+
+    def init(self, params: PyTree) -> PyTree:
+        return init_local_state(params, "momentum")
+
+    def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
+                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+        return momentum_update(grads, slots, params, lr=schedules["lr"],
+                               momentum=self.momentum,
+                               weight_decay=schedules["weight_decay"],
+                               nesterov=self.nesterov)
+
+
+@registry.register(registry.LOCAL_OPTIMIZER, "nesterov")
+class Nesterov(Momentum):
+    """Nesterov-momentum variant of the same update."""
+
+    name = "nesterov"
+
+    def __init__(self, cfg=None, *, momentum: float | None = None):
+        super().__init__(cfg, momentum=momentum, nesterov=True)
+
+
+@registry.register(registry.LOCAL_OPTIMIZER, "lars")
+class LARS:
+    """LARS (You et al. 2017) — paper §V suggested local optimizer."""
+
+    name = "lars"
+
+    def __init__(self, cfg=None, *, momentum: float | None = None,
+                 trust: float = 0.001):
+        self.momentum = momentum if momentum is not None else \
+            (cfg.momentum if cfg is not None else 0.9)
+        self.trust = trust
+
+    def init(self, params: PyTree) -> PyTree:
+        return init_local_state(params, "momentum")
+
+    def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
+                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+        return lars_update(grads, slots, params, lr=schedules["lr"],
+                           momentum=self.momentum,
+                           weight_decay=schedules["weight_decay"],
+                           trust=self.trust)
+
+
+@registry.register(registry.LOCAL_OPTIMIZER, "adam")
+class Adam:
+    """AdamW-style local optimizer — paper §V suggested alternative."""
+
+    name = "adam"
+
+    def __init__(self, cfg=None, *, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8):
+        self.b1, self.b2, self.eps = b1, b2, eps
+
+    def init(self, params: PyTree) -> PyTree:
+        return init_local_state(params, "adam")
+
+    def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
+                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+        return adam_update(grads, slots, params, lr=schedules["lr"],
+                           weight_decay=schedules["weight_decay"],
+                           b1=self.b1, b2=self.b2, eps=self.eps)
+
+
+def from_config(cfg) -> Any:
+    """The `LocalOptimizer` a `DCS3GDConfig` names: ``cfg.local_optimizer``
+    (`Momentum` itself honours ``cfg.nesterov``)."""
+    return registry.make_local_optimizer(cfg.local_optimizer, cfg)

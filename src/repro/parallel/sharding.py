@@ -125,12 +125,25 @@ def param_specs(cfg: ModelConfig, params: PyTree, *, model_size: int,
 
 
 def state_specs(cfg: ModelConfig, state: Any, *, model_size: int,
-                worker_axes: Tuple[str, ...]) -> Any:
-    """Specs for a DCS3GDState/SSGDState-like NamedTuple: params/opt/
-    delta_prev share the param layout (+ worker axis where present)."""
+                worker_axes: Optional[Tuple[str, ...]]) -> Any:
+    """Specs for a training state: params/opt/comm share the param layout
+    (+ worker axis where present).
+
+    Accepts the generic `repro.core.api.TrainState` (pass
+    ``worker_axes=None`` for algorithms with ``worker_sharded=False``) as
+    well as the deprecated DCS3GDState/SSGDState NamedTuples."""
     import repro.core.dc_s3gd as dc
     import repro.core.ssgd as ssgd
+    from repro.core.api import TrainState
 
+    if isinstance(state, TrainState):
+        ps = param_specs(cfg, state.params, model_size=model_size,
+                         worker_axes=worker_axes)
+        opt = _like_params(cfg, state.opt, model_size, worker_axes)
+        comm = {k: param_specs(cfg, v, model_size=model_size,
+                               worker_axes=worker_axes)
+                for k, v in state.comm.items()}
+        return TrainState(ps, opt, comm, P())
     if isinstance(state, dc.DCS3GDState):
         ps = param_specs(cfg, state.params, model_size=model_size,
                          worker_axes=worker_axes)

@@ -1,0 +1,62 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The tier-1 suite must run green with only jax/numpy/pytest present
+(ROADMAP: no extra deps baked into the image).  When `hypothesis` is
+available the real property-based machinery is used (see
+tests/test_correction.py); otherwise this module supplies ``given`` /
+``strategies`` lookalikes that run each property over a small fixed grid
+of draws — boundary values plus seeded pseudo-random interior points —
+so the same assertions still execute deterministically.
+"""
+from __future__ import annotations
+
+import functools
+import random
+from types import SimpleNamespace
+
+_N_RANDOM = 5  # interior draws per strategy, from a fixed seed
+
+
+class _Strategy:
+    def __init__(self, draws):
+        self.draws = list(draws)
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    rng = random.Random(0xDC53D ^ lo ^ hi)
+    draws = [lo, hi, (lo + hi) // 2]
+    draws += [rng.randint(lo, hi) for _ in range(_N_RANDOM)]
+    return _Strategy(draws)
+
+
+def _floats(lo: float, hi: float) -> _Strategy:
+    rng = random.Random(hash((lo, hi)) & 0xFFFF)
+    draws = [lo, hi, (lo + hi) / 2.0]
+    draws += [lo + (hi - lo) * rng.random() for _ in range(_N_RANDOM)]
+    return _Strategy(draws)
+
+
+def given(**strategies):
+    """Run the test once per grid index, zipping the strategies' draws
+    (cycling the shorter ones) — a deterministic, dependency-free shadow
+    of ``hypothesis.given``.
+
+    Deliberately NOT ``functools.wraps``: pytest must see the wrapper's
+    bare ``(*args)`` signature, not the wrapped test's parameters (which
+    it would otherwise try to resolve as fixtures)."""
+
+    def deco(fn):
+        def wrapper(*args):
+            n = max(len(s.draws) for s in strategies.values())
+            for i in range(n):
+                kwargs = {name: s.draws[i % len(s.draws)]
+                          for name, s in strategies.items()}
+                fn(*args, **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats)

@@ -1,0 +1,294 @@
+"""The DistributedOptimizer protocol, the registry, and parity with the
+seed implementations.
+
+``_seed_dc_s3gd_step`` / ``_seed_ssgd_step`` below are frozen transcripts
+of the pre-registry (seed) step math.  The parity tests assert the
+registry-built algorithms reproduce them BITWISE over 5 steps — the
+refactor to composable pieces must not move a single ulp.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.api import TrainState
+from repro.core.correction import dc_correct
+from repro.core.types import DCS3GDConfig
+from repro.core import dc_s3gd as dc_mod
+from repro.core import ssgd as ssgd_mod
+from repro.optim.local import init_local_state, local_update
+
+from helpers import quadratic_problem, stack_batches
+
+CFG = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                   weight_decay=1e-3, total_steps=1)
+W = 4
+
+
+def _tree_bitwise_equal(a, b):
+    return all(bool(jnp.array_equal(x, y, equal_nan=True))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# frozen seed-step transcripts (v0, commit 2929a7f)
+# ---------------------------------------------------------------------------
+
+
+def _seed_dc_s3gd_init(params, n_workers, cfg):
+    wp = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_workers,) + p.shape), params)
+    sdt = jnp.dtype(cfg.state_dtype)
+    opt = init_local_state(wp, cfg.local_optimizer)
+    opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
+    delta = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=sdt), wp)
+    return wp, opt, delta, jnp.zeros((), jnp.int32)
+
+
+def _seed_dc_s3gd_step(params, opt, delta_prev, step, batch, *, loss_fn, cfg):
+    lr, wd = dc_mod.schedules(step, cfg)
+    comm_dtype = jnp.dtype(cfg.comm_dtype)
+    delta_bar = jax.tree.map(
+        lambda d: jnp.mean(d.astype(comm_dtype), axis=0, keepdims=True)
+        .astype(jnp.float32), delta_prev)
+    vg = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(0, 0))
+    loss, grads = vg(params, batch)
+    D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
+                     delta_bar, delta_prev)
+    g_t, lam = dc_correct(grads, D, cfg.lambda0, mode=cfg.lambda_norm,
+                          axis0_is_worker=True)
+    upd = local_update(cfg.local_optimizer)
+    delta, opt = upd(g_t, opt, params, lr=lr, momentum=cfg.momentum,
+                     weight_decay=wd, nesterov=cfg.nesterov)
+    new_params = jax.tree.map(
+        lambda w, d_i, dw: (w.astype(jnp.float32) + d_i
+                            + dw.astype(jnp.float32)).astype(w.dtype),
+        params, D, delta)
+    sdt = jnp.dtype(cfg.state_dtype)
+    delta_store = jax.tree.map(lambda d: d.astype(sdt), delta)
+    opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
+    return new_params, opt, delta_store, step + 1, jnp.mean(loss)
+
+
+def _seed_ssgd_step(params, opt, step, batch, *, loss_fn, cfg):
+    lr, wd = dc_mod.schedules(step, cfg)
+    vg = jax.vmap(jax.value_and_grad(loss_fn), in_axes=(None, 0))
+    loss, grads = vg(params, batch)
+    grads = jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0),
+                         grads)
+    upd = local_update(cfg.local_optimizer)
+    delta, opt = upd(grads, opt, params, lr=lr, momentum=cfg.momentum,
+                     weight_decay=wd, nesterov=cfg.nesterov)
+    new_params = jax.tree.map(
+        lambda w, dw: (w.astype(jnp.float32)
+                       + dw.astype(jnp.float32)).astype(w.dtype),
+        params, delta)
+    return new_params, opt, step + 1, jnp.mean(loss)
+
+
+# ---------------------------------------------------------------------------
+# parity: registry-built algorithms == seed implementations, bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_dc_s3gd_registry_parity_bitwise_5_steps():
+    loss_fn, init, _, batch_fn = quadratic_problem(n=16, seed=7)
+    alg = registry.make("dc_s3gd", CFG, n_workers=W)
+    state = alg.init(init)
+    p, o, d, s = _seed_dc_s3gd_init(init, W, CFG)
+    assert _tree_bitwise_equal(state.params, p)
+    assert _tree_bitwise_equal(state.comm["delta_prev"], d)
+    for t in range(5):
+        batch = stack_batches(batch_fn, t, W)
+        state, m = alg.step(state, batch, loss_fn=loss_fn)
+        p, o, d, s, loss = _seed_dc_s3gd_step(p, o, d, s, batch,
+                                              loss_fn=loss_fn, cfg=CFG)
+        assert _tree_bitwise_equal(state.params, p), f"params step {t}"
+        assert _tree_bitwise_equal(state.opt, o), f"opt step {t}"
+        assert _tree_bitwise_equal(state.comm["delta_prev"], d), \
+            f"delta step {t}"
+        assert bool(jnp.array_equal(m["loss"], loss)), f"loss step {t}"
+    assert int(state.step) == 5
+
+
+def test_ssgd_registry_parity_bitwise_5_steps():
+    loss_fn, init, _, batch_fn = quadratic_problem(n=16, seed=7)
+    alg = registry.make("ssgd", CFG)
+    state = alg.init(init)
+    p, o, s = init, init_local_state(init, CFG.local_optimizer), state.step
+    for t in range(5):
+        batch = stack_batches(batch_fn, t, W)
+        state, m = alg.step(state, batch, loss_fn=loss_fn)
+        p, o, s, loss = _seed_ssgd_step(p, o, s, batch, loss_fn=loss_fn,
+                                        cfg=CFG)
+        assert _tree_bitwise_equal(state.params, p), f"params step {t}"
+        assert _tree_bitwise_equal(state.opt, o), f"opt step {t}"
+        assert bool(jnp.array_equal(m["loss"], loss)), f"loss step {t}"
+
+
+def test_deprecated_shims_match_class():
+    """The module-level init/*_step shims and the registry path are the
+    same computation on the same state (bitwise)."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8, seed=1)
+    alg = registry.make("dc_s3gd", CFG, n_workers=W)
+    st_new = alg.init(init)
+    st_old = dc_mod.init(init, W, CFG)
+    for t in range(3):
+        batch = stack_batches(batch_fn, t, W)
+        st_new, m_new = alg.step(st_new, batch, loss_fn=loss_fn)
+        st_old, m_old = dc_mod.dc_s3gd_step(st_old, batch, loss_fn=loss_fn,
+                                            cfg=CFG)
+    assert _tree_bitwise_equal(st_new.params, st_old.params)
+    assert _tree_bitwise_equal(st_new.comm["delta_prev"], st_old.delta_prev)
+    assert bool(jnp.array_equal(m_new["loss"], m_old["loss"]))
+
+
+def test_stale_is_dc_s3gd_with_lambda0_zero():
+    """"stale" zeroes the compensation regardless of cfg.lambda0 and is
+    bitwise the lambda0=0 DC-S3GD trajectory."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8, seed=2)
+    cfg0 = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.0,
+                        weight_decay=0.0)
+    cfg_nonzero = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.7,
+                               weight_decay=0.0)
+    a_stale = registry.make("stale", cfg_nonzero, n_workers=W)
+    a_zero = registry.make("dc_s3gd", cfg0, n_workers=W)
+    s1, s2 = a_stale.init(init), a_zero.init(init)
+    for t in range(4):
+        batch = stack_batches(batch_fn, t, W)
+        s1, m1 = a_stale.step(s1, batch, loss_fn=loss_fn)
+        s2, m2 = a_zero.step(s2, batch, loss_fn=loss_fn)
+        assert float(jnp.max(jnp.abs(m1["lambda"]))) == 0.0
+    assert _tree_bitwise_equal(s1.params, s2.params)
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip over every registered name
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposes_all_algorithms():
+    assert set(registry.names()) >= {"dc_s3gd", "ssgd", "stale", "dc_asgd"}
+    assert set(registry.names(registry.REDUCER)) >= {"mean_allreduce",
+                                                     "gossip"}
+    assert set(registry.names(registry.LOCAL_OPTIMIZER)) >= {
+        "momentum", "nesterov", "lars", "adam"}
+    assert set(registry.names(registry.COMPENSATOR)) >= {"dc", "none"}
+
+
+@pytest.mark.parametrize("name", ["dc_s3gd", "ssgd", "stale", "dc_asgd"])
+def test_registry_roundtrip_every_algorithm(name):
+    """make -> init -> 3 protocol steps -> eval_params for every name."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8, seed=3)
+    alg = registry.make(name, CFG, n_workers=W)
+    assert alg.name == name
+    assert isinstance(alg.worker_sharded, bool)
+    state = alg.init(init)
+    assert isinstance(state, TrainState)
+    for t in range(3):
+        state, m = alg.step(state, stack_batches(batch_fn, t, W),
+                            loss_fn=loss_fn)
+        assert bool(jnp.isfinite(m["loss"])), (name, t)
+    ev = alg.eval_params(state)
+    assert ev["w"].shape == init["w"].shape
+    assert int(state.step) == 3
+
+
+@pytest.mark.parametrize("name", ["momentum", "nesterov", "lars", "adam"])
+def test_local_optimizer_objects_uniform_contract(name):
+    opt = registry.make_local_optimizer(name, CFG)
+    params = {"w": jnp.ones((3, 2)), "scale": jnp.ones((2,))}
+    grads = jax.tree.map(jnp.ones_like, params)
+    slots = opt.init(params)
+    sched = {"lr": jnp.float32(0.1), "weight_decay": jnp.float32(0.01)}
+    delta, slots = opt(grads, slots, params, sched)
+    assert jax.tree.structure(delta) == jax.tree.structure(params)
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(delta))
+    # a second application must accept the returned slots
+    delta2, _ = opt(grads, slots, params, sched)
+    assert delta2["w"].shape == params["w"].shape
+
+
+# ---------------------------------------------------------------------------
+# reducers
+# ---------------------------------------------------------------------------
+
+
+def test_gossip_reducer_ring_neighborhood_mean():
+    from repro.core.reduce import GossipReduce
+    x = {"w": jnp.arange(5 * 3, dtype=jnp.float32).reshape(5, 3)}
+    red = GossipReduce(neighbors=1)(x)["w"]
+    for i in range(5):
+        expect = (x["w"][(i - 1) % 5] + x["w"][i] + x["w"][(i + 1) % 5]) / 3
+        np.testing.assert_allclose(np.asarray(red[i]), np.asarray(expect),
+                                   rtol=1e-6)
+
+
+def test_dc_s3gd_with_gossip_converges():
+    """The new scenario: DC + D-PSGD-style ring mixing still solves the
+    quadratic (weights mix with neighbors; consensus contracts)."""
+    loss_fn, init, w_star, batch_fn = quadratic_problem(n=12)
+    cfg = DCS3GDConfig(learning_rate=0.3, momentum=0.9, lambda0=0.2,
+                       weight_decay=0.0)
+    alg = registry.make("dc_s3gd", cfg, n_workers=8, reducer="gossip")
+    state = alg.init(init)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
+    for t in range(300):
+        state, m = step(state, stack_batches(batch_fn, t, 8))
+    avg = alg.eval_params(state)
+    assert float(m["loss"]) < 1e-3
+    assert jnp.linalg.norm(avg["w"] - w_star) < 0.1
+    assert float(alg.spread(state)) < 1.0
+
+
+def test_mean_reducer_matches_seed_wire_format():
+    from repro.core.reduce import MeanAllReduce
+    x = {"w": jnp.array([[1.0, 2.0], [3.0, 5.0]])}
+    out = MeanAllReduce(CFG)(x)["w"]
+    assert out.shape == (1, 2)
+    np.testing.assert_allclose(np.asarray(out[0]), [2.0, 3.5])
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas path through the protocol
+# ---------------------------------------------------------------------------
+
+
+def test_use_kernels_through_registry_matches_reference():
+    loss_fn, init, _, batch_fn = quadratic_problem(n=20, seed=2)
+    cfg = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                       weight_decay=1e-3)
+    a_ref = registry.make("dc_s3gd", cfg, n_workers=3)
+    a_fused = registry.make("dc_s3gd", cfg, n_workers=3, use_kernels=True)
+    s_ref, s_fused = a_ref.init(init), a_fused.init(init)
+    for t in range(3):
+        batch = stack_batches(batch_fn, t, 3)
+        s_ref, _ = a_ref.step(s_ref, batch, loss_fn=loss_fn)
+        s_fused, _ = a_fused.step(s_fused, batch, loss_fn=loss_fn)
+        # blocked-kernel reduction order differs from jnp.sum's
+        assert jnp.allclose(s_ref.params["w"], s_fused.params["w"],
+                            atol=1e-4), t
+
+
+# ---------------------------------------------------------------------------
+# TrainState checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_train_state_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import restore_pytree, save_pytree
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+    alg = registry.make("dc_s3gd", CFG, n_workers=2)
+    state = alg.init(init)
+    state, _ = alg.step(state, stack_batches(batch_fn, 0, 2),
+                        loss_fn=loss_fn)
+    path = tmp_path / "state.npz"
+    save_pytree(path, state, step=1)
+    restored = restore_pytree(path, jax.tree.map(jnp.zeros_like, state))
+    assert _tree_bitwise_equal(state, restored)
+    # training continues from the restored state
+    state2, m = alg.step(restored, stack_batches(batch_fn, 1, 2),
+                         loss_fn=loss_fn)
+    assert bool(jnp.isfinite(m["loss"]))

@@ -1,14 +1,23 @@
-"""Property-based tests of the delay compensation (Eq. 6/10/17)."""
+"""Property-based tests of the delay compensation (Eq. 6/10/17).
+
+`hypothesis` is optional: with it installed these are real property-based
+tests; without it the deterministic fallback grid in
+tests/_hypothesis_fallback.py runs the same assertions (so the tier-1
+command needs no extra deps).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("ci", max_examples=40, deadline=None)
+    settings.load_profile("ci")
+except ModuleNotFoundError:  # deterministic fallback path
+    from _hypothesis_fallback import given, strategies as st
 
 from repro.core.correction import dc_correct
-
-settings.register_profile("ci", max_examples=40, deadline=None)
-settings.load_profile("ci")
 
 
 def _tree_norm(t):

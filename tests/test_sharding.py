@@ -56,7 +56,8 @@ def test_train_state_specs_divisible(arch, multipod):
     state = S.abstract_train_state(model, W, dc_cfg)
     spec = state_specs(cfg, state, model_size=16, worker_axes=waxes)
     _check_divisible(state.params, spec.params, f"{arch}.params")
-    _check_divisible(state.delta_prev, spec.delta_prev, f"{arch}.delta")
+    _check_divisible(state.comm["delta_prev"], spec.comm["delta_prev"],
+                     f"{arch}.delta")
     # worker axis present on every param leaf
     for sp in jax.tree.leaves(spec.params,
                               is_leaf=lambda x: isinstance(x, P)):
