@@ -1,3 +1,6 @@
-from repro.checkpoint.store import restore_pytree, save_pytree
+from repro.checkpoint.store import (checkpoint_exists, checkpoint_meta,
+                                    checkpoint_step, restore_pytree,
+                                    save_pytree)
 
-__all__ = ["restore_pytree", "save_pytree"]
+__all__ = ["checkpoint_exists", "checkpoint_meta", "checkpoint_step",
+           "restore_pytree", "save_pytree"]

@@ -45,10 +45,7 @@ def save_pytree(path: str | Path, tree: PyTree, *, step: Optional[int] = None,
 
 def restore_pytree(path: str | Path, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (names must match)."""
-    path = Path(path)
-    if not path.exists() and path.with_suffix(path.suffix + ".npz").exists():
-        path = path.with_suffix(path.suffix + ".npz")
-    data = np.load(path, allow_pickle=False)
+    data = np.load(_resolve(path), allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
     names, like_leaves, treedef = _flatten_with_names(like)
     if names != meta["names"]:
@@ -64,6 +61,29 @@ def restore_pytree(path: str | Path, like: PyTree) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _resolve(path: str | Path) -> Path:
+    path = Path(path)
+    if not path.exists() and path.with_suffix(path.suffix + ".npz").exists():
+        path = path.with_suffix(path.suffix + ".npz")
+    return path
+
+
+def checkpoint_exists(path: str | Path) -> bool:
+    """Whether a checkpoint is present at ``path`` (same suffix-resolution
+    rule as `restore_pytree`/`checkpoint_meta`)."""
+    return _resolve(path).exists()
+
+
+def checkpoint_meta(path: str | Path) -> dict:
+    """Full metadata dict saved alongside the state (``step`` plus whatever
+    ``extra_meta`` the writer recorded — the Engine stores
+    {algo, reducer, local_optimizer, n_workers, staleness})."""
+    data = np.load(_resolve(path), allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    meta.pop("names", None)
+    meta.pop("dtypes", None)
+    return meta
+
+
 def checkpoint_step(path: str | Path) -> Optional[int]:
-    data = np.load(Path(path), allow_pickle=False)
-    return json.loads(str(data["__meta__"])).get("step")
+    return checkpoint_meta(path).get("step")

@@ -25,7 +25,17 @@ Composable pieces (each with its own registry kind):
   (``mean_allreduce``, ring-neighborhood ``gossip``, `repro.core.reduce`);
 * ``Compensator`` — the pseudo-Hessian staleness correction
   (``dc`` / ``none``, `repro.core.compensate`), shared verbatim by
-  DC-S3GD and DC-ASGD.
+  DC-S3GD and DC-ASGD;
+* ``StalenessPolicy`` — how wide the stale window may be
+  (``fixed`` = the paper's one-step pipeline, ``dynamic_ssp`` =
+  Dynamic-SSP-style runtime threshold, `repro.core.staleness`).
+
+Every algorithm also declares its own sharding through the
+``state_specs`` / ``batch_specs`` hooks: given a `MeshAxes` naming the
+worker and tensor-parallel mesh axes, the algorithm returns the
+`PartitionSpec` pytrees for its `TrainState` and its batch.  Training,
+serving, and the dry-run all derive shardings from these two calls —
+no launch-layer code second-guesses how an algorithm shards.
 """
 from __future__ import annotations
 
@@ -39,6 +49,30 @@ Metrics = Dict[str, jnp.ndarray]
 LossFn = Callable[[PyTree, PyTree], jnp.ndarray]
 # traced scalar schedules handed to local optimizers each step
 Schedules = Mapping[str, jnp.ndarray]
+
+
+class MeshAxes(NamedTuple):
+    """Mesh-axis naming contract handed to the sharding hooks.
+
+    worker      the mesh axes whose product forms the DC worker dim
+                (('pod', 'data') on the multipod mesh, ('data',) on one
+                pod); every non-'model' axis by convention;
+    model       name of the tensor-parallel axis;
+    model_size  size of the model axis — partition rules use it to decide
+                head/dim divisibility.
+    """
+
+    worker: Tuple[str, ...]
+    model: str = "model"
+    model_size: int = 1
+
+    @property
+    def worker_spec(self):
+        """Worker axes as a single PartitionSpec dim entry (a bare name
+        when one axis, the tuple when several, None when empty)."""
+        if not self.worker:
+            return None
+        return self.worker if len(self.worker) > 1 else self.worker[0]
 
 
 class TrainState(NamedTuple):
@@ -106,15 +140,53 @@ class Compensator(Protocol):
 
 
 @runtime_checkable
-class DistributedOptimizer(Protocol):
-    """A complete distributed training algorithm.
+class StalenessPolicy(Protocol):
+    """How wide the stale window may be, as a runtime-tunable object.
 
-    ``worker_sharded`` tells the sharding layer whether state leaves carry
-    a leading worker axis (DC-S3GD: yes; SSGD/DC-ASGD-PS: no).
+    The paper's DC-S3GD pipelines exactly one step: the reduction of
+    ``Δw^{t-1}`` overlaps step ``t`` unconditionally (``fixed``).  Dynamic
+    SSP (Zhao et al. 2019) instead sets a staleness *threshold*: while the
+    observed per-worker step skew stays under it, the overlapped stale
+    path is admitted; beyond it the step falls back to a blocking pull
+    toward the average.  The policy's carried state (e.g. per-worker
+    progress counters) lives in ``TrainState.comm["staleness"]``;
+    ``stateless`` policies carry nothing and add zero step overhead.
     """
 
     name: str
-    worker_sharded: bool
+    stateless: bool
+
+    def init(self, n_workers: int) -> PyTree:
+        """Carried policy state (``{}`` for stateless policies)."""
+        ...
+
+    def admit(self, pstate: PyTree) -> Tuple[jnp.ndarray, PyTree]:
+        """(admit stale window this step? — traced bool, new state)."""
+        ...
+
+    def observe(self, pstate: PyTree, worker_steps) -> PyTree:
+        """Fold measured per-worker progress into the carried state
+        (host-side; the policy owns its own state layout)."""
+        ...
+
+    def state_specs(self, axes: "MeshAxes") -> PyTree:
+        """PartitionSpecs matching :meth:`init`'s structure."""
+        ...
+
+
+@runtime_checkable
+class DistributedOptimizer(Protocol):
+    """A complete distributed training algorithm.
+
+    Besides init/step/eval_params, every algorithm owns its sharding: the
+    ``state_specs`` / ``batch_specs`` hooks map its `TrainState` and its
+    (W, b, ...) batch to `PartitionSpec` pytrees for a given `MeshAxes` —
+    worker-sharded algorithms put the worker axes on the leading state
+    dim, replicated ones return canonical specs.  The launch layer
+    (`repro.launch.engine.Engine`) never inspects algorithm internals.
+    """
+
+    name: str
 
     def init(self, params: PyTree) -> TrainState:
         ...
@@ -125,4 +197,14 @@ class DistributedOptimizer(Protocol):
 
     def eval_params(self, state: TrainState) -> PyTree:
         """Canonical (unstacked) weights for evaluation/serving."""
+        ...
+
+    def state_specs(self, model_cfg: Any, state: TrainState,
+                    axes: MeshAxes) -> TrainState:
+        """PartitionSpec pytree mirroring ``state`` (P() on scalars)."""
+        ...
+
+    def batch_specs(self, model_cfg: Any, batch: PyTree,
+                    axes: MeshAxes) -> PyTree:
+        """PartitionSpec pytree mirroring the (W, b, ...) batch."""
         ...

@@ -18,31 +18,22 @@ the (W, ...) stale worker copies; :meth:`DCASGD.step` takes the same
 (W, b, ...)-leaved batch as the other algorithms and performs ONE PS
 transaction for the round-robin worker ``step mod W`` (selecting that
 worker's shard of the batch).  It shares the `Compensator` and
-`LocalOptimizer` pieces with DC-S3GD verbatim.  The module-level ``init``
-/ ``dc_asgd_step`` are deprecated shims kept for one PR.
+`LocalOptimizer` pieces with DC-S3GD verbatim.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import registry
-from repro.core.api import LossFn, Metrics, TrainState
+from repro.core.api import LossFn, MeshAxes, Metrics, TrainState
 from repro.core.types import DCS3GDConfig
 from repro.optim import local as local_opt
+from repro.parallel import sharding as shd
 
 PyTree = Any
-
-
-class DCASGDState(NamedTuple):
-    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
-
-    ps_params: PyTree          # the parameter-server copy
-    worker_params: PyTree      # (W, ...) stale worker copies
-    opt: PyTree                # PS-side optimizer slots
-    step: jnp.ndarray
 
 
 @registry.register(registry.ALGORITHM, "dc_asgd")
@@ -50,7 +41,6 @@ class DCASGD:
     """PS-asynchronous baseline through the protocol (round-robin sim)."""
 
     name = "dc_asgd"
-    worker_sharded = False
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, compensator=None, **_ignored):
@@ -126,37 +116,25 @@ class DCASGD:
     def eval_params(self, state: TrainState) -> PyTree:
         return state.params
 
+    # -- sharding hooks -----------------------------------------------------
+
+    def state_specs(self, model_cfg, state: TrainState,
+                    axes: MeshAxes) -> TrainState:
+        """Centralized simulator: everything replicated over workers — the
+        PS copy is canonical and the (W, ...) stale worker copies keep a
+        plain (unsharded) leading dim."""
+        return shd.train_state_specs(model_cfg, state,
+                                     model_size=axes.model_size,
+                                     worker_axes=None)
+
+    def batch_specs(self, model_cfg, batch: PyTree,
+                    axes: MeshAxes) -> PyTree:
+        return shd.batch_specs(model_cfg, batch,
+                               worker_axes=axes.worker_spec)
+
 
 def _dist(a: PyTree, b: PyTree) -> jnp.ndarray:
     sq = sum(jax.tree.leaves(jax.tree.map(
         lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32)
                                         - y.astype(jnp.float32))), a, b)))
     return jnp.sqrt(sq)
-
-
-# ---------------------------------------------------------------------------
-# deprecated shims (pre-registry surface; removed next PR)
-# ---------------------------------------------------------------------------
-
-
-def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCASGDState:
-    """Deprecated: use ``registry.make("dc_asgd", cfg, n_workers=W).init``."""
-    st = DCASGD(cfg, n_workers=n_workers).init(params)
-    return DCASGDState(st.params, st.comm["worker_params"], st.opt, st.step)
-
-
-def dc_asgd_step(state: DCASGDState, worker_id, batch_i: PyTree, *,
-                 loss_fn: Callable, cfg: DCS3GDConfig,
-                 compensate: bool = True):
-    """Deprecated: use ``registry.make("dc_asgd", cfg, ...).step``."""
-    n_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
-    alg = DCASGD(cfg, n_workers=n_workers,
-                 compensator="dc" if compensate else "none")
-    ts = TrainState(state.ps_params, state.opt,
-                    {"worker_params": state.worker_params}, state.step)
-    new_state, metrics = alg._transaction(ts, worker_id, batch_i,
-                                          loss_fn=loss_fn)
-    legacy = DCASGDState(new_state.params,
-                         new_state.comm["worker_params"],
-                         new_state.opt, new_state.step)
-    return legacy, metrics

@@ -17,9 +17,12 @@ Decentralized stale-synchronous SGD with delay compensation:
   operation (Eq. 12).
 
 The algorithm is the `DCS3GD` class — a thin composition of a
-`LocalOptimizer`, a `Reducer`, and a `Compensator` over the generic
-`TrainState` (params / opt / comm / step), registered as ``"dc_s3gd"``
-(and, with compensation disabled, ``"stale"``) in `repro.core.registry`.
+`LocalOptimizer`, a `Reducer`, a `Compensator`, and a `StalenessPolicy`
+over the generic `TrainState` (params / opt / comm / step), registered as
+``"dc_s3gd"`` (and, with compensation disabled, ``"stale"``) in
+`repro.core.registry`.  It declares its own sharding through the
+``state_specs`` / ``batch_specs`` hooks: every state leaf carries the
+leading worker axes of the `MeshAxes` it is handed.
 
 Algorithm 1 line-by-line mapping (comments in :meth:`DCS3GD.step`).
 
@@ -27,36 +30,23 @@ The first iteration of Algorithm 1 (plain step before the loop) is
 reproduced by initializing ``delta_prev = 0``: then ``Δ̄w = 0``, ``D_i = 0``,
 the correction vanishes and the step degenerates to plain momentum SGD —
 identical on all workers, exactly the algorithm's prologue.
-
-The module-level ``init`` / ``dc_s3gd_step`` / ``average_params`` /
-``worker_spread`` functions are **deprecated shims** over the class
-(kept for one PR); new code goes through ``registry.make("dc_s3gd", cfg)``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import registry
-from repro.core.api import LossFn, Metrics, TrainState
+from repro.core.api import LossFn, MeshAxes, Metrics, TrainState
 from repro.core.types import DCS3GDConfig
 from repro.optim import local as local_opt
 from repro.optim.schedules import linear_warmup_linear_decay
+from repro.parallel import sharding as shd
 
 PyTree = Any
-
-
-class DCS3GDState(NamedTuple):
-    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
-
-    params: PyTree       # (W, ...) per-worker weights w_i
-    opt: PyTree          # (W, ...) local optimizer slots (momentum m_i)
-    delta_prev: PyTree   # (W, ...) Δw_i^{t-1} — the in-flight all-reduce payload
-    step: jnp.ndarray    # scalar int32
 
 
 def replicate_for_workers(params: PyTree, n_workers: int) -> PyTree:
@@ -84,19 +74,19 @@ def schedules(step, cfg: DCS3GDConfig):
 class DCS3GD:
     """Algorithm 1 as a composition of protocol pieces.
 
-    ``local_optimizer`` / ``reducer`` / ``compensator`` accept a registered
-    name or an object; defaults come from ``cfg`` (``cfg.local_optimizer``,
-    mean all-reduce, Eq. 10+17 compensation).  ``use_kernels`` routes the
+    ``local_optimizer`` / ``reducer`` / ``compensator`` / ``staleness``
+    accept a registered name or an object; defaults come from ``cfg``
+    (``cfg.local_optimizer``, mean all-reduce, Eq. 10+17 compensation,
+    fixed one-step window).  ``use_kernels`` routes the
     correction+momentum+Eq.12 tail through the fused Pallas kernels
     (`repro.kernels`) — momentum + global-lambda mode only.
     """
 
     name = "dc_s3gd"
-    worker_sharded = True
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None, compensator=None,
-                 use_kernels: bool = False):
+                 staleness=None, use_kernels: bool = False):
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -106,6 +96,8 @@ class DCS3GD:
             "mean_allreduce" if reducer is None else reducer, cfg)
         self.compensator = registry.make_compensator(
             "dc" if compensator is None else compensator, cfg)
+        self.staleness = registry.make_staleness_policy(
+            "fixed" if staleness is None else staleness, cfg)
         self.use_kernels = use_kernels
 
     # -- protocol -----------------------------------------------------------
@@ -125,6 +117,8 @@ class DCS3GD:
         comm = {} if self._reduces_weights else {
             "delta_prev": jax.tree.map(
                 lambda p: jnp.zeros_like(p, dtype=sdt), wp)}
+        if not self.staleness.stateless:
+            comm["staleness"] = self.staleness.init(self.n_workers)
         return TrainState(params=wp, opt=opt, comm=comm,
                           step=jnp.zeros((), jnp.int32))
 
@@ -165,8 +159,32 @@ class DCS3GD:
             D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
                              delta_bar, delta_prev)
 
+        # --- staleness policy: may this step use the stale overlapped
+        # window?  'fixed' is stateless and skips the branch (bitwise the
+        # paper behaviour); 'dynamic_ssp' revokes the window when the
+        # observed per-worker step skew exceeds its threshold, falling
+        # back to a blocking pull toward the current weight average.
+        pstate = None
+        pol_metrics = {}
+        if not self.staleness.stateless:
+            admit, pstate = self.staleness.admit(state.comm["staleness"])
+
+            def _sync_pull():
+                wbar = jax.tree.map(
+                    lambda p: jnp.mean(p.astype(jnp.float32), axis=0,
+                                       keepdims=True), state.params)
+                return jax.tree.map(
+                    lambda wb, w: wb - w.astype(jnp.float32),
+                    wbar, state.params)
+
+            # lax.cond (not where): the revoked-window branch costs a full
+            # params-tree mean — only pay it on the steps that take it
+            D = jax.lax.cond(admit, lambda: D, _sync_pull)
+            pol_metrics = {"ssp_admit": admit.astype(jnp.float32)}
+
         if self.use_kernels:
-            return self._fused_tail(state, grads, D, loss, lr, wd)
+            return self._fused_tail(state, grads, D, loss, lr, wd,
+                                    pstate=pstate, pol_metrics=pol_metrics)
 
         # --- g̃_i = g_i + λ_i g_i⊙g_i⊙D_i  (Eq. 10 + 17)
         g_t, lam = self.compensator(grads, D, axis0_is_worker=True)
@@ -192,19 +210,54 @@ class DCS3GD:
             jnp.mean(jnp.stack([jnp.mean(v) for v in jax.tree.leaves(lam)])),
             "distance_norm": _mean_worker_norm(D),
             "delta_norm": _mean_worker_norm(delta),
+            **pol_metrics,
         }
-        return TrainState(new_params, opt, self._comm(delta, sdt),
+        return TrainState(new_params, opt, self._comm(delta, sdt, pstate),
                           state.step + 1), metrics
 
-    def _comm(self, delta: PyTree, sdt) -> PyTree:
-        if self._reduces_weights:
-            return {}
-        return {"delta_prev": jax.tree.map(lambda d: d.astype(sdt), delta)}
+    def _comm(self, delta: PyTree, sdt, pstate: Optional[PyTree] = None
+              ) -> PyTree:
+        comm = {} if self._reduces_weights else {
+            "delta_prev": jax.tree.map(lambda d: d.astype(sdt), delta)}
+        if pstate is not None:
+            comm["staleness"] = pstate
+        return comm
 
     def eval_params(self, state: TrainState) -> PyTree:
         """w̄ for evaluation (paper Eq. 8 / averaging-in-parameter-space)."""
         return jax.tree.map(
             lambda p: jnp.mean(p.astype(jnp.float32), axis=0), state.params)
+
+    # -- sharding hooks -----------------------------------------------------
+
+    def state_specs(self, model_cfg, state: TrainState,
+                    axes: MeshAxes) -> TrainState:
+        """Every state leaf carries the leading worker axes (one weight
+        replica per (pod, data) shard); policy state shards per the
+        policy's own declaration."""
+        overrides = {}
+        if "staleness" in state.comm:
+            overrides["staleness"] = self.staleness.state_specs(axes)
+        return shd.train_state_specs(
+            model_cfg, state, model_size=axes.model_size,
+            worker_axes=axes.worker_spec, comm_overrides=overrides)
+
+    def batch_specs(self, model_cfg, batch: PyTree,
+                    axes: MeshAxes) -> PyTree:
+        return shd.batch_specs(model_cfg, batch,
+                               worker_axes=axes.worker_spec)
+
+    def observe_progress(self, state: TrainState, worker_steps
+                         ) -> TrainState:
+        """Feed measured per-worker progress to the staleness policy
+        (host-side, between jitted scans).  No-op for stateless policies;
+        the policy's own ``observe`` owns its state layout."""
+        if self.staleness.stateless:
+            return state
+        comm = dict(state.comm)
+        comm["staleness"] = self.staleness.observe(comm["staleness"],
+                                                   worker_steps)
+        return state._replace(comm=comm)
 
     def spread(self, state: TrainState) -> jnp.ndarray:
         """Mean Euclidean distance of workers from the average — the
@@ -218,7 +271,9 @@ class DCS3GD:
 
     # -- fused Pallas tail --------------------------------------------------
 
-    def _fused_tail(self, state: TrainState, grads, D, loss, lr, wd
+    def _fused_tail(self, state: TrainState, grads, D, loss, lr, wd, *,
+                    pstate: Optional[PyTree] = None,
+                    pol_metrics: Optional[Metrics] = None
                     ) -> Tuple[TrainState, Metrics]:
         cfg = self.cfg
         assert self.local_optimizer.name == "momentum" \
@@ -244,9 +299,11 @@ class DCS3GD:
             "lambda": jnp.mean(lam),
             "distance_norm": _mean_worker_norm(D),
             "delta_norm": _mean_worker_norm(delta_f32),
+            **(pol_metrics or {}),
         }
         opt = jax.tree.map(lambda x: x.astype(sdt), {"m": m_new})
-        return TrainState(new_params, opt, self._comm(delta_f32, sdt),
+        return TrainState(new_params, opt,
+                          self._comm(delta_f32, sdt, pstate),
                           state.step + 1), metrics
 
 
@@ -302,53 +359,4 @@ def _mean_worker_norm(tree: PyTree) -> jnp.ndarray:
     sq = sum(jax.tree.leaves(jax.tree.map(
         lambda x: jnp.sum(jnp.square(x.astype(jnp.float32)),
                           axis=tuple(range(1, x.ndim))), tree)))
-    return jnp.mean(jnp.sqrt(sq))
-
-
-# ---------------------------------------------------------------------------
-# deprecated shims (pre-registry surface; removed next PR)
-# ---------------------------------------------------------------------------
-
-
-def _to_legacy(state: TrainState) -> DCS3GDState:
-    return DCS3GDState(state.params, state.opt, state.comm["delta_prev"],
-                       state.step)
-
-
-def _from_legacy(state: DCS3GDState) -> TrainState:
-    return TrainState(state.params, state.opt,
-                      {"delta_prev": state.delta_prev}, state.step)
-
-
-def init(params: PyTree, n_workers: int, cfg: DCS3GDConfig) -> DCS3GDState:
-    """Deprecated: use ``registry.make("dc_s3gd", cfg, n_workers=W).init``."""
-    return _to_legacy(DCS3GD(cfg, n_workers=n_workers).init(params))
-
-
-def dc_s3gd_step(state: DCS3GDState, batch: PyTree, *,
-                 loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
-                 cfg: DCS3GDConfig,
-                 use_fused_kernels: bool = False,
-                 ) -> Tuple[DCS3GDState, dict]:
-    """Deprecated: use ``registry.make("dc_s3gd", cfg, ...).step``."""
-    n_workers = jax.tree.leaves(state.params)[0].shape[0]
-    alg = DCS3GD(cfg, n_workers=n_workers, use_kernels=use_fused_kernels)
-    new_state, metrics = alg.step(_from_legacy(state), batch,
-                                  loss_fn=loss_fn)
-    return _to_legacy(new_state), metrics
-
-
-def average_params(state) -> PyTree:
-    """Deprecated: use ``alg.eval_params(state)``."""
-    return jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0),
-                        state.params)
-
-
-def worker_spread(state) -> jnp.ndarray:
-    """Deprecated: use ``alg.spread(state)``."""
-    avg = average_params(state)
-    sq = sum(jax.tree.leaves(jax.tree.map(
-        lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32) - a[None]),
-                             axis=tuple(range(1, p.ndim))),
-        state.params, avg)))
     return jnp.mean(jnp.sqrt(sq))

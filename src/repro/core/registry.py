@@ -28,15 +28,18 @@ ALGORITHM = "algorithm"
 LOCAL_OPTIMIZER = "local_optimizer"
 REDUCER = "reducer"
 COMPENSATOR = "compensator"
+STALENESS_POLICY = "staleness_policy"
 
 _REGISTRY: Dict[str, Dict[str, Callable[..., Any]]] = {
     ALGORITHM: {}, LOCAL_OPTIMIZER: {}, REDUCER: {}, COMPENSATOR: {},
+    STALENESS_POLICY: {},
 }
 
 # imported lazily, once, the first time a lookup misses
 _PROVIDERS = (
     "repro.core.reduce",
     "repro.core.compensate",
+    "repro.core.staleness",
     "repro.optim.local",
     "repro.core.dc_s3gd",
     "repro.core.ssgd",
@@ -86,7 +89,8 @@ def make(name: str, cfg, **kwargs):
 
     ``cfg`` is a `repro.core.types.DCS3GDConfig`; per-algorithm keyword
     arguments (``n_workers``, ``reducer``, ``local_optimizer``,
-    ``compensator``, ``use_kernels``) pass through to the factory.
+    ``compensator``, ``staleness``, ``use_kernels``) pass through to the
+    factory.
     """
     return _lookup(ALGORITHM, name)(cfg, **kwargs)
 
@@ -109,3 +113,10 @@ def make_compensator(spec, cfg=None):
     if not isinstance(spec, str):
         return spec
     return _lookup(COMPENSATOR, spec)(cfg)
+
+
+def make_staleness_policy(spec, cfg=None):
+    """Name (or object) -> `StalenessPolicy`; threshold comes from cfg."""
+    if not isinstance(spec, str):
+        return spec
+    return _lookup(STALENESS_POLICY, spec)(cfg)

@@ -6,32 +6,26 @@ time is t_C + t_ARed (paper Eq. 13) — the thing DC-S3GD removes.
 
 `SSGD` composes the same `LocalOptimizer` / `Reducer` pieces as DC-S3GD
 over the generic `TrainState` (no worker axis on state leaves, ``comm`` is
-empty) and registers as ``"ssgd"``.  The module-level ``init`` /
-``ssgd_step`` are deprecated shims kept for one PR.
+empty) and registers as ``"ssgd"``.  Its ``state_specs`` hook therefore
+returns canonical (replicated-over-workers) specs while ``batch_specs``
+still shards the leading batch axis over the worker mesh axes.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import registry
-from repro.core.api import LossFn, Metrics, TrainState
+from repro.core.api import LossFn, MeshAxes, Metrics, TrainState
 from repro.core.dc_s3gd import schedules
 from repro.core.reduce import collapse_worker_axis
 from repro.core.types import DCS3GDConfig
 from repro.optim import local as local_opt
+from repro.parallel import sharding as shd
 
 PyTree = Any
-
-
-class SSGDState(NamedTuple):
-    """Deprecated state layout (pre-`TrainState`); kept for the shims."""
-
-    params: PyTree   # replicated (no worker axis)
-    opt: PyTree
-    step: jnp.ndarray
 
 
 @registry.register(registry.ALGORITHM, "ssgd")
@@ -45,7 +39,6 @@ class SSGD:
     """
 
     name = "ssgd"
-    worker_sharded = False
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None, **_ignored):
@@ -87,25 +80,17 @@ class SSGD:
     def eval_params(self, state: TrainState) -> PyTree:
         return state.params
 
+    # -- sharding hooks -----------------------------------------------------
 
-# ---------------------------------------------------------------------------
-# deprecated shims (pre-registry surface; removed next PR)
-# ---------------------------------------------------------------------------
+    def state_specs(self, model_cfg, state: TrainState,
+                    axes: MeshAxes) -> TrainState:
+        """Replicated over workers: canonical param layout, no worker axis
+        on any state leaf."""
+        return shd.train_state_specs(model_cfg, state,
+                                     model_size=axes.model_size,
+                                     worker_axes=None)
 
-
-def init(params: PyTree, cfg: DCS3GDConfig) -> SSGDState:
-    """Deprecated: use ``registry.make("ssgd", cfg).init``."""
-    st = SSGD(cfg).init(params)
-    return SSGDState(st.params, st.opt, st.step)
-
-
-def ssgd_step(state: SSGDState, batch: PyTree, *,
-              loss_fn: Callable[[PyTree, PyTree], jnp.ndarray],
-              cfg: DCS3GDConfig) -> Tuple[SSGDState, dict]:
-    """Deprecated: use ``registry.make("ssgd", cfg).step``."""
-    alg = SSGD(cfg)
-    new_state, metrics = alg.step(
-        TrainState(state.params, state.opt, {}, state.step), batch,
-        loss_fn=loss_fn)
-    return SSGDState(new_state.params, new_state.opt,
-                     new_state.step), metrics
+    def batch_specs(self, model_cfg, batch: PyTree,
+                    axes: MeshAxes) -> PyTree:
+        return shd.batch_specs(model_cfg, batch,
+                               worker_axes=axes.worker_spec)

@@ -1,0 +1,112 @@
+"""Pluggable staleness policies (`repro.core.api.StalenessPolicy`).
+
+The paper hard-wires a one-step stale window: the all-reduce of the
+previous update overlaps the current step, always.  This module makes
+that window a *policy object* the DC-S3GD / stale steps consult:
+
+* ``fixed`` — the paper's behaviour.  Stateless; the step math with this
+  policy is bitwise identical to the registry parity transcript (PR 1).
+* ``dynamic_ssp`` — Dynamic-SSP-style (Zhao et al. 2019, 1908.11848)
+  runtime-tunable threshold on the observed per-worker step skew.  The
+  policy carries per-worker progress counters in
+  ``TrainState.comm["staleness"]``; while ``max − min`` of the counters
+  stays at or under ``threshold``, the stale overlapped path is admitted
+  and the trajectory matches ``fixed`` bitwise.  Once the skew exceeds
+  the threshold, the step falls back to a blocking pull toward the
+  current weight average (the SSP barrier analogue: fast workers stop
+  running ahead on stale information and re-synchronize), which contracts
+  the skew's effect instead of compounding it.
+
+Inside the jitted step the counters advance in lockstep (+1 each) — skew
+only appears when the launch layer feeds real observations via
+``DCS3GD.observe_progress`` (which delegates to the policy's own
+``observe`` method — each policy owns its state layout).  A revoked step
+collapses the counters to the leader: the blocking pull it triggers IS
+the synchronization, so one skew spike costs one sync step, not the rest
+of the run.  The policy decision stays a pure function of carried state,
+so it works under jit/scan/`jax.eval_shape`.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import registry
+from repro.core.api import MeshAxes
+
+PyTree = Any
+
+
+@registry.register(registry.STALENESS_POLICY, "fixed")
+class FixedWindow:
+    """The paper's unconditional one-step stale window.
+
+    ``stateless = True``: carries nothing in ``comm`` and the algorithm
+    skips the policy branch entirely — zero overhead, bitwise-identical
+    to the pre-policy step math.
+    """
+
+    name = "fixed"
+    stateless = True
+
+    def __init__(self, cfg=None):
+        del cfg
+
+    def init(self, n_workers: int) -> PyTree:
+        return {}
+
+    def state_specs(self, axes: MeshAxes) -> PyTree:
+        return {}
+
+    def admit(self, pstate: PyTree) -> Tuple[jnp.ndarray, PyTree]:
+        return jnp.bool_(True), {}
+
+    def observe(self, pstate: PyTree, worker_steps) -> PyTree:
+        return pstate
+
+
+@registry.register(registry.STALENESS_POLICY, "dynamic_ssp")
+class DynamicSSP:
+    """Dynamic-SSP threshold on observed per-worker step skew.
+
+    ``threshold`` is the maximum tolerated ``max(steps) − min(steps)``
+    before the stale window is revoked for the step.  It defaults to
+    ``cfg.ssp_threshold`` so it is a config knob, not a constant baked
+    into the step.
+    """
+
+    name = "dynamic_ssp"
+    stateless = False
+
+    def __init__(self, cfg=None, *, threshold: int | None = None):
+        if threshold is None:
+            threshold = cfg.ssp_threshold if cfg is not None else 4
+        self.threshold = int(threshold)
+
+    def init(self, n_workers: int) -> PyTree:
+        return {"worker_steps": jnp.zeros((n_workers,), jnp.int32)}
+
+    def state_specs(self, axes: MeshAxes) -> PyTree:
+        # (W,) counters shard over the worker axes (W == their product)
+        return {"worker_steps": P(axes.worker_spec)}
+
+    def admit(self, pstate: PyTree) -> Tuple[jnp.ndarray, PyTree]:
+        steps = pstate["worker_steps"]
+        skew = jnp.max(steps) - jnp.min(steps)
+        ok = skew <= self.threshold
+        # a revoked step performs the blocking pull to the average — that
+        # sync RESOLVES the staleness (SSP barrier semantics), so the
+        # counters collapse to the leader and the window re-opens on the
+        # next step instead of blocking forever
+        synced = jnp.broadcast_to(jnp.max(steps), steps.shape)
+        new = jnp.where(ok, steps, synced) + 1
+        return ok, {"worker_steps": new}
+
+    def observe(self, pstate: PyTree, worker_steps) -> PyTree:
+        """Overwrite the carried counters with measured progress
+        (host-side; the launch layer calls this between jitted scans)."""
+        out = dict(pstate)
+        out["worker_steps"] = jnp.asarray(worker_steps, jnp.int32)
+        return out

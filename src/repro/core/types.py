@@ -246,6 +246,10 @@ class DCS3GDConfig:
     # local optimizer U(.): 'momentum' (paper) | 'lars' | 'adam' (§V)
     local_optimizer: str = "momentum"
     nesterov: bool = False
+    # staleness policy knob: max tolerated per-worker step skew before the
+    # 'dynamic_ssp' policy revokes the stale window (Dynamic SSP, Zhao
+    # et al. 2019).  Ignored by the 'fixed' policy.
+    ssp_threshold: int = 4
     # communication precision for the delta all-reduce (beyond-paper knob)
     comm_dtype: str = "float32"
     # storage dtype for the per-worker optimizer slots (momentum) and

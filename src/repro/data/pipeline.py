@@ -3,7 +3,7 @@
 Each DC-S3GD worker consumes a *disjoint* shard of the stream, matching the
 paper's data-parallel setting ("each replica is trained on a subset of the
 training data set").  Batches come out stacked with a leading worker axis
-(W, b, ...), ready for `dc_s3gd_step`/`ssgd_step`.
+(W, b, ...), ready for any `DistributedOptimizer.step`.
 
 Two dataset families cover the benchmarks:
 * ``SyntheticLMDataset`` — a learnable Markov-ish token stream (next token

@@ -1,9 +1,10 @@
 """jit'd pytree-level wrappers around the Pallas kernels.
 
-``dc_s3gd_step_fused`` plugs these into the core algorithm: per-leaf
-flatten -> pad to (ROWS x 128) tiles -> kernel -> unpad/reshape.  On CPU the
-kernels run with ``interpret=True`` (Python-level execution of the kernel
-body); on TPU the same code compiles to Mosaic.
+`DCS3GD._fused_tail` (``use_kernels=True``) plugs these into the core
+algorithm: per-leaf flatten -> pad to (ROWS x 128) tiles -> kernel ->
+unpad/reshape.  On CPU the kernels run with ``interpret=True``
+(Python-level execution of the kernel body); on TPU the same code
+compiles to Mosaic.
 """
 from __future__ import annotations
 

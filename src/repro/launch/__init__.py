@@ -1,1 +1,2 @@
-"""Drivers: train / serve / dryrun, mesh + sharding-spec builders."""
+"""Launch layer: the `Engine` (mesh, shardings, jit, checkpoints, loops)
+plus the train / serve / dryrun drivers and abstract-spec builders."""

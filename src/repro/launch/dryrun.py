@@ -12,23 +12,23 @@ import time              # noqa: E402
 import traceback         # noqa: E402
 from pathlib import Path  # noqa: E402
 
-import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax               # noqa: E402  (device count must be forced first)
 
 from repro.analysis import roofline as rl                    # noqa: E402
 from repro.configs import ARCHS, get_config                  # noqa: E402
 from repro.core import registry                              # noqa: E402
 from repro.core.types import DCS3GDConfig, INPUT_SHAPES      # noqa: E402
 from repro.launch import specs as S                          # noqa: E402
-from repro.launch.mesh import (make_production_mesh, n_workers,  # noqa: E402
-                               worker_axes)
+from repro.launch.engine import Engine, mesh_context         # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_workers  # noqa: E402
 from repro.models.transformer import Model                   # noqa: E402
-from repro.parallel.sharding import (batch_specs, cache_specs,  # noqa: E402
-                                     param_specs, state_specs)
 
 """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
 production meshes, print memory/cost analysis, dump roofline JSON.
+
+All shardings come from the `Engine` — the training specs from the
+algorithm's own ``state_specs``/``batch_specs`` hooks, the serving specs
+from the same partition rules minus the worker axis.
 
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
       --shape train_4k --mesh pod
@@ -36,88 +36,57 @@ production meshes, print memory/cost analysis, dump roofline JSON.
 """
 
 
-def _sharding_tree(mesh, spec_tree):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
-
-def _maybe_axes(axes, size: int, mesh) -> tuple:
-    """Use the sharding axes only when the dim divides evenly (long_500k has
-    global_batch=1: batch must stay replicated)."""
-    total = 1
-    for a in (axes if isinstance(axes, tuple) else (axes,)):
-        total *= mesh.shape[a]
-    return axes if size % total == 0 else None
-
-
 def build_train(cfg, shape, mesh, dc_cfg, algo: str):
     """Returns (step_fn, abstract args, in/out shardings).  ``algo`` is any
     registered `DistributedOptimizer` name — the registry-built object
-    declares its own worker sharding."""
+    declares its own sharding through the `state_specs` hook."""
     model = Model(cfg, remat=True,
                   seq_parallel=bool(os.environ.get("DRYRUN_SEQ_PARALLEL")))
     W = n_workers(mesh)
-    waxes = worker_axes(mesh)
-    wa = waxes if len(waxes) > 1 else waxes[0]
     alg = registry.make(algo, dc_cfg, n_workers=W,
                         reducer=os.environ.get("DRYRUN_REDUCER",
-                                               "mean_allreduce"))
+                                               "mean_allreduce"),
+                        staleness=os.environ.get("DRYRUN_STALENESS",
+                                                 "fixed"))
+    engine = Engine(model, alg, mesh=mesh)
     state = S.abstract_train_state(model, W, dc_cfg, alg)
     batch = S.train_batch_specs(cfg, shape, W)
-    ms = mesh.shape["model"]
 
-    st_spec = state_specs(cfg, state, model_size=ms,
-                          worker_axes=wa if alg.worker_sharded else None)
-    b_spec = batch_specs(cfg, batch, worker_axes=wa)
+    st_sh, b_sh = engine.train_shardings(state, batch)
 
     def step(st, bt):
         return alg.step(st, bt, loss_fn=model.loss)
 
-    in_sh = (_sharding_tree(mesh, st_spec), _sharding_tree(mesh, b_spec))
-    out_sh = (_sharding_tree(mesh, st_spec), None)
-    return step, (state, batch), in_sh, out_sh
+    return step, (state, batch), (st_sh, b_sh), (st_sh, None)
 
 
 def build_prefill(cfg, shape, mesh):
     model = Model(cfg, remat=True)
+    engine = Engine(model, mesh=mesh)
     params = S.abstract_params(model)
     batch = S.prefill_batch_specs(cfg, shape)
-    ms = mesh.shape["model"]
-    waxes = worker_axes(mesh)
-    da = waxes if len(waxes) > 1 else waxes[0]
-    da = _maybe_axes(da, shape.global_batch, mesh)
-
-    p_spec = param_specs(cfg, params, model_size=ms, worker_axes=None)
-    b_spec = batch_specs(cfg, batch, data_axes=da)
+    p_sh, b_sh, _ = engine.serve_shardings(params, batch=batch,
+                                           global_batch=shape.global_batch)
 
     def step(p, b):
         return model.prefill(p, b, cache_len=shape.seq_len)
 
-    in_sh = (_sharding_tree(mesh, p_spec), _sharding_tree(mesh, b_spec))
-    return step, (params, batch), in_sh, None
+    return step, (params, batch), (p_sh, b_sh), None
 
 
 def build_decode(cfg, shape, mesh):
     model = Model(cfg, remat=False)
+    engine = Engine(model, mesh=mesh)
     params = S.abstract_params(model)
     cache = S.abstract_cache(model, shape)
     batch = S.decode_batch_specs(cfg, shape)
-    ms = mesh.shape["model"]
-    waxes = worker_axes(mesh)
-    da = waxes if len(waxes) > 1 else waxes[0]
-    da = _maybe_axes(da, shape.global_batch, mesh)
-
-    p_spec = param_specs(cfg, params, model_size=ms, worker_axes=None)
-    c_spec = cache_specs(cfg, cache, model_size=ms, data_axes=da)
-    b_spec = batch_specs(cfg, batch, data_axes=da)
+    p_sh, b_sh, c_sh = engine.serve_shardings(
+        params, batch=batch, cache=cache, global_batch=shape.global_batch)
 
     def step(p, c, b):
         return model.decode_step(p, c, b)
 
-    in_sh = (_sharding_tree(mesh, p_spec), _sharding_tree(mesh, c_spec),
-             _sharding_tree(mesh, b_spec))
-    out_sh = (None, _sharding_tree(mesh, c_spec))
-    return step, (params, cache, batch), in_sh, out_sh
+    return step, (params, cache, batch), (p_sh, c_sh, b_sh), (None, c_sh)
 
 
 def run_one(arch: str, shape_name: str, mesh_kind: str, *, algo: str = "dc_s3gd",
@@ -158,11 +127,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, algo: str = "dc_s3gd"
         step, args, in_sh, out_sh = build_decode(cfg, shape, mesh)
         donate = (1,)
 
-    # jax >= 0.5 spells the mesh context jax.sharding.set_mesh; older
-    # releases use the Mesh object itself as the context manager
-    mesh_ctx = (jax.sharding.set_mesh(mesh)
-                if hasattr(jax.sharding, "set_mesh") else mesh)
-    with mesh_ctx:
+    with mesh_context(mesh):
         jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)

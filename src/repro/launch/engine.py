@@ -1,0 +1,302 @@
+"""The Engine — one object behind train, serve, and the dry-run.
+
+`Engine` owns everything the launch layer used to hand-roll per driver:
+
+* **mesh + sharding trees** — derived from the per-algorithm
+  ``state_specs`` / ``batch_specs`` hooks (`repro.core.api.MeshAxes`);
+  serving param/cache shardings come from the same partition rules
+  (`repro.parallel.sharding`), so training and serving shard from one
+  seam.  With ``mesh=None`` (CPU smoke scale) everything degrades to
+  plain jit — the trajectories are unchanged;
+* **jit** — train-step / prefill / decode compilation, with donation and
+  in/out shardings attached when a mesh is present (inputs may be
+  ``jax.ShapeDtypeStruct`` trees: the dry-run lowers without allocating);
+* **checkpointing with metadata** — ``save`` records
+  ``{algo, reducer, local_optimizer, n_workers, staleness,
+  ssp_threshold}`` next to the state so ``restore`` sites can rebuild
+  the matching algorithm instead of trusting re-passed flags
+  (`algorithm_for_checkpoint`);
+* **the step loop** — ``fit`` runs the jitted step over a batch function
+  with logging and history collection;
+* **generation** — a single-trace `jax.lax.scan` decode loop with a
+  pluggable sampler (``greedy`` / ``categorical``).
+
+`train.py`, `serve.py`, and `dryrun.py` are argument parsing plus Engine
+calls.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpoint_meta, restore_pytree, save_pytree
+from repro.core import registry
+from repro.core.types import DCS3GDConfig
+from repro.launch.mesh import make_axes
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+# checkpoint metadata keys describing the algorithm that produced a state
+CKPT_ALGO_KEYS = ("algo", "reducer", "local_optimizer", "n_workers",
+                  "staleness", "ssp_threshold")
+
+
+# ---------------------------------------------------------------------------
+# pluggable samplers for the decode loop
+# ---------------------------------------------------------------------------
+
+
+def _greedy(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    del key, temperature
+    return jnp.argmax(logits, axis=-1)
+
+
+def _categorical(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    t = max(float(temperature), 1e-6)
+    return jax.random.categorical(key, logits / t, axis=-1)
+
+
+SAMPLERS: Dict[str, Callable] = {"greedy": _greedy,
+                                 "categorical": _categorical}
+
+
+def mesh_context(mesh):
+    """Context manager activating a mesh (jax >= 0.5 spells it
+    jax.sharding.set_mesh; older releases use the Mesh itself); a no-op
+    context when ``mesh`` is None."""
+    if mesh is None:
+        import contextlib
+        return contextlib.nullcontext()
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh
+
+
+class Engine:
+    """Mesh, shardings, jit, checkpoints, and loops for one (model, alg).
+
+    ``alg`` may be None for pure serving engines; ``mesh`` may be None for
+    single-host smoke runs (no shardings attached to jit).
+    """
+
+    def __init__(self, model, alg=None, *, mesh=None):
+        self.model = model
+        self.alg = alg
+        self.mesh = mesh
+
+    # -- mesh / sharding seam ----------------------------------------------
+
+    def mesh_axes(self):
+        return None if self.mesh is None else make_axes(self.mesh)
+
+    def mesh_context(self):
+        return mesh_context(self.mesh)
+
+    def _shard(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def train_shardings(self, state: PyTree, batch: PyTree):
+        """(state shardings, batch shardings) from the algorithm's own
+        ``state_specs`` / ``batch_specs`` hooks; (None, None) without a
+        mesh.  ``state``/``batch`` may be abstract."""
+        axes = self.mesh_axes()
+        if axes is None:
+            return None, None
+        cfg = self.model.cfg
+        return (self._shard(self.alg.state_specs(cfg, state, axes)),
+                self._shard(self.alg.batch_specs(cfg, batch, axes)))
+
+    def _data_axes(self, global_batch: int):
+        """Serving batch axis: worker mesh axes when they divide the batch
+        (long_500k has global_batch=1: must stay replicated)."""
+        axes = self.mesh_axes()
+        total = 1
+        for a in axes.worker:
+            total *= self.mesh.shape[a]
+        return axes.worker_spec if global_batch % total == 0 else None
+
+    def serve_shardings(self, params: PyTree, *, global_batch: int,
+                        batch: Optional[PyTree] = None,
+                        cache: Optional[PyTree] = None):
+        """Param (+ batch / cache) shardings for serving — the same
+        partition rules as training, minus the worker axis."""
+        axes = self.mesh_axes()
+        if axes is None:
+            return None, None, None
+        cfg = self.model.cfg
+        da = self._data_axes(global_batch)
+        p_sh = self._shard(shd.param_specs(cfg, params,
+                                           model_size=axes.model_size,
+                                           worker_axes=None))
+        b_sh = None if batch is None else self._shard(
+            shd.batch_specs(cfg, batch, data_axes=da))
+        c_sh = None if cache is None else self._shard(
+            shd.cache_specs(cfg, cache, model_size=axes.model_size,
+                            data_axes=da))
+        return p_sh, b_sh, c_sh
+
+    # -- training -----------------------------------------------------------
+
+    def init_state(self, key) -> PyTree:
+        return self.alg.init(self.model.init(key))
+
+    def jit_train_step(self, state: Optional[PyTree] = None,
+                       batch: Optional[PyTree] = None, *,
+                       donate: bool = True):
+        """The jitted training step.  With a mesh, ``state``/``batch``
+        (possibly abstract) are required to derive the sharding trees."""
+        step = partial(self.alg.step, loss_fn=self.model.loss)
+        donate_argnums = (0,) if donate else ()
+        if self.mesh is None:
+            return jax.jit(step, donate_argnums=donate_argnums)
+        st_sh, b_sh = self.train_shardings(state, batch)
+        return jax.jit(step, in_shardings=(st_sh, b_sh),
+                       out_shardings=(st_sh, None),
+                       donate_argnums=donate_argnums)
+
+    def fit(self, state: PyTree, batch_fn: Callable[[int], PyTree], *,
+            steps: int, start: int = 0, log_every: int = 10,
+            verbose: bool = True) -> Tuple[PyTree, list, float]:
+        """Run the step loop; returns (state, metric history, wall s)."""
+        first = batch_fn(start) if steps > start else None
+        step_fn = self.jit_train_step(state, first)
+        history = []
+        t0 = time.time()
+        for it in range(start, steps):
+            batch = first if it == start else batch_fn(it)
+            state, metrics = step_fn(state, batch)
+            if it % log_every == 0 or it == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = it
+                m["wall_s"] = round(time.time() - t0, 1)
+                history.append(m)
+                if verbose:
+                    extra = ""
+                    if "distance_norm" in m:
+                        extra = (f" |D|={m['distance_norm']:.2e} "
+                                 f"lam={m.get('lambda', 0):.3f}")
+                    print(f"[train] step {it:5d} loss={m['loss']:.4f} "
+                          f"lr={m['lr']:.4f}{extra}")
+        return state, history, time.time() - t0
+
+    # -- checkpointing with metadata -----------------------------------------
+
+    def ckpt_meta(self) -> dict:
+        alg = self.alg
+        return {
+            "algo": alg.name,
+            "n_workers": getattr(alg, "n_workers", None),
+            "reducer": getattr(getattr(alg, "reducer", None), "name", None),
+            "local_optimizer": getattr(
+                getattr(alg, "local_optimizer", None), "name", None),
+            "staleness": getattr(
+                getattr(alg, "staleness", None), "name", None),
+            # policy hyper-params travel with the policy name — a resumed
+            # dynamic_ssp run must get the trained threshold back, not
+            # whatever the flag defaults to
+            "ssp_threshold": getattr(
+                getattr(alg, "staleness", None), "threshold", None),
+        }
+
+    def save(self, path, state: PyTree, *, step: Optional[int] = None):
+        """Save the state with the algorithm metadata restore sites need."""
+        return save_pytree(path, state, step=step,
+                           extra_meta=self.ckpt_meta())
+
+    def restore(self, path, state: PyTree) -> PyTree:
+        return restore_pytree(path, state)
+
+    # -- generation (serve) ---------------------------------------------------
+
+    def generate(self, params: PyTree, prompts: jnp.ndarray, *, gen: int,
+                 sampler: Optional[str] = None, temperature: float = 0.0,
+                 key=None, extra_batch: Optional[dict] = None) -> jnp.ndarray:
+        """prompts: (B, P) int32 -> (B, gen) generated ids.
+
+        One prefill trace plus ONE `jax.lax.scan` trace for the whole
+        decode loop (instead of ``gen`` separate dispatches).  ``sampler``
+        is a `SAMPLERS` name; by default greedy at ``temperature <= 0``
+        and categorical above.
+        """
+        model = self.model
+        if sampler is None:
+            sampler = "greedy" if temperature <= 0.0 else "categorical"
+        sample = SAMPLERS[sampler]
+
+        B, P_len = prompts.shape
+        offset = 0
+        batch = {"tokens": prompts}
+        if extra_batch:
+            batch.update(extra_batch)
+        if model.cfg.vlm is not None and "patches" in batch:
+            offset = batch["patches"].shape[1]
+        cache_len = P_len + offset + gen + 1
+
+        prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+        logits, cache = prefill(params, batch)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok0 = sample(logits, key, temperature)
+
+        def body(carry, t):
+            cache, tok, key = carry
+            key, sub = jax.random.split(key)
+            pos = (P_len + offset + t).astype(jnp.int32)
+            step = {"tokens": tok[:, None], "pos": pos}
+            if model.cfg.vlm is not None:
+                step["mrope_positions"] = jnp.full((3, 1), pos, jnp.int32)
+            logits, cache = model.decode_step(params, cache, step)
+            nxt = sample(logits, sub, temperature)
+            return (cache, nxt, key), tok
+
+        decode_loop = jax.jit(lambda p, c, t0, k: jax.lax.scan(
+            body, (c, t0, k), jnp.arange(gen)), donate_argnums=1)
+        _, out = decode_loop(params, cache, tok0, key)
+        return out.T  # (gen, B) -> (B, gen)
+
+
+# ---------------------------------------------------------------------------
+# rebuilding the algorithm a checkpoint was trained with
+# ---------------------------------------------------------------------------
+
+
+def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
+                             n_workers: int = 1,
+                             local_optimizer: str = "momentum",
+                             reducer: str = "mean_allreduce",
+                             staleness: str = "fixed",
+                             ssp_threshold: int = 4,
+                             dc_cfg: Optional[DCS3GDConfig] = None
+                             ) -> Tuple[Any, dict]:
+    """Build the `DistributedOptimizer` matching a training checkpoint.
+
+    Metadata recorded by `Engine.save` wins; the keyword arguments are
+    fallbacks for pre-metadata checkpoints.  Returns (algorithm, the
+    resolved {algo, reducer, local_optimizer, n_workers, staleness}).
+    Before metadata, a mismatched ``--local-optimizer`` silently restored
+    into wrong-shaped opt slots cast by the template — now the template is
+    built from what actually trained.
+    """
+    meta = checkpoint_meta(path)
+    resolved = {"algo": algo, "n_workers": n_workers,
+                "local_optimizer": local_optimizer, "reducer": reducer,
+                "staleness": staleness, "ssp_threshold": ssp_threshold}
+    for k in CKPT_ALGO_KEYS:
+        if meta.get(k) is not None:
+            resolved[k] = meta[k]
+    cfg = dc_cfg if dc_cfg is not None else \
+        DCS3GDConfig(local_optimizer=resolved["local_optimizer"],
+                     ssp_threshold=int(resolved["ssp_threshold"]))
+    alg = registry.make(resolved["algo"], cfg,
+                        n_workers=int(resolved["n_workers"]),
+                        local_optimizer=resolved["local_optimizer"],
+                        reducer=resolved["reducer"],
+                        staleness=resolved["staleness"])
+    return alg, resolved

@@ -32,3 +32,10 @@ def n_workers(mesh) -> int:
     for a in worker_axes(mesh):
         out *= mesh.shape[a]
     return out
+
+
+def make_axes(mesh):
+    """The `MeshAxes` contract handed to the per-algorithm sharding hooks."""
+    from repro.core.api import MeshAxes
+    return MeshAxes(worker=worker_axes(mesh), model="model",
+                    model_size=mesh.shape.get("model", 1))

@@ -1,15 +1,19 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+"""Batched serving driver: argument parsing + an `Engine` call.
 
-CPU-scale example (reduced configs); on a pod the same code runs under the
-production mesh with the cache/param shardings from `repro.parallel`.
+Prefills a batch of prompts, then decodes with a single-trace
+`jax.lax.scan` loop (one compilation for the whole generation instead of
+one dispatch per token); the sampler is pluggable
+(`repro.launch.engine.SAMPLERS`: greedy / categorical).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16
 
 To serve weights produced by the training driver, point ``--train-ckpt``
-at a `repro.launch.train` checkpoint; the matching `DistributedOptimizer`
-is rebuilt via `repro.core.registry` and its ``eval_params`` (e.g. the
-DC-S3GD worker average, paper Eq. 8) become the served weights.
+at a `repro.launch.train` checkpoint: the checkpoint's own
+{algo, reducer, local_optimizer, n_workers, staleness} metadata rebuilds
+the matching `DistributedOptimizer` (the flags are only fallbacks for
+pre-metadata checkpoints), and its ``eval_params`` (e.g. the DC-S3GD
+worker average, paper Eq. 8) become the served weights.
 """
 from __future__ import annotations
 
@@ -23,58 +27,32 @@ import jax.numpy as jnp
 from repro.checkpoint import restore_pytree
 from repro.configs import ARCHS, get_config, reduced
 from repro.core import registry
-from repro.core.types import DCS3GDConfig
+from repro.launch.engine import SAMPLERS, Engine, algorithm_for_checkpoint
 from repro.models.transformer import Model
 
 
-def sample(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
-
-
 def generate(model: Model, params, prompts: jnp.ndarray, *, gen: int,
-             temperature: float = 0.0, key=None, extra_batch=None):
-    """prompts: (B, P) int32.  Returns (B, gen) generated ids."""
-    B, P = prompts.shape
-    offset = 0
-    batch = {"tokens": prompts}
-    if extra_batch:
-        batch.update(extra_batch)
-    if model.cfg.vlm is not None and "patches" in batch:
-        offset = batch["patches"].shape[1]
-    cache_len = P + offset + gen + 1
-
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-    decode = jax.jit(model.decode_step)
-
-    logits, cache = prefill(params, batch)
-    key = key if key is not None else jax.random.PRNGKey(0)
-    out = []
-    tok = sample(logits, key, temperature)
-    for t in range(gen):
-        out.append(tok)
-        key, sub = jax.random.split(key)
-        step = {"tokens": tok[:, None], "pos": jnp.int32(P + offset + t)}
-        if model.cfg.vlm is not None:
-            step["mrope_positions"] = jnp.full((3, 1), P + offset + t)
-        logits, cache = decode(params, cache, step)
-        tok = sample(logits, sub, temperature)
-    return jnp.stack(out, axis=1)
+             temperature: float = 0.0, key=None, extra_batch=None,
+             sampler=None):
+    """prompts: (B, P) int32.  Returns (B, gen) generated ids.
+    Thin wrapper over `Engine.generate` (the scan-based decode loop)."""
+    return Engine(model).generate(params, prompts, gen=gen,
+                                  temperature=temperature, key=key,
+                                  extra_batch=extra_batch, sampler=sampler)
 
 
 def params_from_train_ckpt(model: Model, path, *, algo: str, n_workers: int,
                            local_optimizer: str = "momentum",
-                           reducer: str = "mean_allreduce") -> jnp.ndarray:
-    """Restore a `repro.launch.train` checkpoint and extract the served
-    weights through the registry-built algorithm's ``eval_params``.
-    ``local_optimizer`` and ``reducer`` must match training (they shape
-    the opt slots and the comm state respectively)."""
-    cfg = DCS3GDConfig(local_optimizer=local_optimizer)
-    alg = registry.make(algo, cfg, n_workers=n_workers, reducer=reducer)
+                           reducer: str = "mean_allreduce"):
+    """Restore a training checkpoint and extract the served weights through
+    the algorithm recorded in its metadata (arguments are fallbacks for
+    pre-metadata checkpoints)."""
+    alg, resolved = algorithm_for_checkpoint(
+        path, algo=algo, n_workers=n_workers,
+        local_optimizer=local_optimizer, reducer=reducer)
     template = alg.init(model.init(jax.random.PRNGKey(0)))
     state = restore_pytree(path, template)
-    return alg.eval_params(state)
+    return alg.eval_params(state), resolved
 
 
 def main(argv=None):
@@ -85,34 +63,37 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--sampler", choices=sorted(SAMPLERS), default=None,
+                    help="token sampler (default: greedy at temperature 0, "
+                         "categorical above)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--train-ckpt", type=Path, default=None,
-                    help="serve eval_params of a training checkpoint")
+                    help="serve eval_params of a training checkpoint "
+                         "(metadata selects the algorithm)")
     ap.add_argument("--algo", choices=registry.names(), default="dc_s3gd",
-                    help="algorithm that produced --train-ckpt")
+                    help="fallback for pre-metadata checkpoints")
     ap.add_argument("--workers", type=int, default=4,
-                    help="worker count of --train-ckpt")
+                    help="fallback for pre-metadata checkpoints")
     ap.add_argument("--local-optimizer", default="momentum",
                     choices=registry.names(registry.LOCAL_OPTIMIZER),
-                    help="local optimizer --train-ckpt was trained with")
+                    help="fallback for pre-metadata checkpoints")
     ap.add_argument("--reducer", default="mean_allreduce",
                     choices=registry.names(registry.REDUCER),
-                    help="reducer --train-ckpt was trained with")
+                    help="fallback for pre-metadata checkpoints")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     model = Model(cfg, remat=False, q_chunk=64, kv_chunk=64, scan_chunk=64)
+    engine = Engine(model)
     key = jax.random.PRNGKey(args.seed)
     if args.train_ckpt is not None:
-        params = params_from_train_ckpt(model, args.train_ckpt,
-                                        algo=args.algo,
-                                        n_workers=args.workers,
-                                        local_optimizer=args.local_optimizer,
-                                        reducer=args.reducer)
+        params, resolved = params_from_train_ckpt(
+            model, args.train_ckpt, algo=args.algo, n_workers=args.workers,
+            local_optimizer=args.local_optimizer, reducer=args.reducer)
         print(f"[serve] weights from {args.train_ckpt} "
-              f"(algo={args.algo}, eval_params)")
+              f"(algo={resolved['algo']}, eval_params)")
     else:
         params = model.init(key)
 
@@ -129,8 +110,10 @@ def main(argv=None):
             key, (args.batch, cfg.encoder.n_frames, cfg.d_model))
 
     t0 = time.time()
-    ids = generate(model, params, prompts, gen=args.gen,
-                   temperature=args.temperature, key=key, extra_batch=extra)
+    ids = engine.generate(params, prompts, gen=args.gen,
+                          sampler=args.sampler,
+                          temperature=args.temperature, key=key,
+                          extra_batch=extra)
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: batch={args.batch} prompt={args.prompt_len} "
           f"gen={args.gen} -> {ids.shape} in {dt:.1f}s "

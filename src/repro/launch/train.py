@@ -1,32 +1,36 @@
-"""End-to-end training driver.
+"""End-to-end training driver: argument parsing + an `Engine` call.
 
 Runs any registered `DistributedOptimizer` (DC-S3GD, the SSGD / stale
 baselines, the DC-ASGD simulator) for real steps on whatever devices
 exist — a ~100M-param config on CPU for the example run, or the
 production mesh on a pod (same code path; the mesh just grows).  The
-algorithm, its local optimizer, reducer, and compensator are all selected
-from config via `repro.core.registry` — this module knows no algorithm
-internals.
+algorithm, its local optimizer, reducer, compensator, and staleness
+policy are all selected from config via `repro.core.registry`; the mesh,
+sharding trees, jit, checkpointing, and step loop all live in
+`repro.launch.engine.Engine` — this module knows no algorithm internals.
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
       --reduced --steps 200 --workers 4 --batch-per-worker 8 --seq 128 \
-      --algo dc_s3gd --reducer mean_allreduce
+      --algo dc_s3gd --reducer mean_allreduce --staleness fixed
+
+``--resume`` reads the checkpoint's {algo, reducer, local_optimizer,
+n_workers, staleness} metadata back instead of trusting the re-passed
+flags (pre-metadata checkpoints fall back to the flags).
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
-from functools import partial
 from pathlib import Path
 
 import jax
 
-from repro.checkpoint import restore_pytree, save_pytree
+from repro.checkpoint import checkpoint_exists, checkpoint_meta
 from repro.configs import ARCHS, get_config, reduced
 from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.data import SyntheticLMDataset, worker_batches
+from repro.launch.engine import CKPT_ALGO_KEYS, Engine
 from repro.models.transformer import Model
 
 
@@ -43,6 +47,12 @@ def build_argparser():
     ap.add_argument("--local-optimizer", default=None,
                     choices=registry.names(registry.LOCAL_OPTIMIZER),
                     help="override cfg.local_optimizer")
+    ap.add_argument("--staleness", default="fixed",
+                    choices=registry.names(registry.STALENESS_POLICY),
+                    help="stale-window policy (dynamic_ssp = skew threshold)")
+    ap.add_argument("--ssp-threshold", type=int, default=4,
+                    help="max per-worker step skew for --staleness "
+                         "dynamic_ssp")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch-per-worker", type=int, default=8)
@@ -61,6 +71,23 @@ def build_argparser():
     return ap
 
 
+def _adopt_resume_meta(args) -> None:
+    """Checkpoint metadata wins over re-passed algorithm flags."""
+    meta = checkpoint_meta(args.resume)
+    adopted = {k: meta[k] for k in CKPT_ALGO_KEYS if meta.get(k) is not None}
+    if not adopted:
+        return
+    args.algo = adopted.get("algo", args.algo)
+    args.reducer = adopted.get("reducer", args.reducer)
+    args.local_optimizer = adopted.get("local_optimizer",
+                                       args.local_optimizer)
+    args.staleness = adopted.get("staleness", args.staleness)
+    args.ssp_threshold = int(adopted.get("ssp_threshold",
+                                         args.ssp_threshold))
+    args.workers = int(adopted.get("n_workers", args.workers))
+    print(f"[train] resume metadata: {adopted}")
+
+
 def run(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
@@ -68,55 +95,50 @@ def run(args) -> dict:
     model = Model(cfg, remat=False, moe_dense=args.reduced,
                   q_chunk=64, kv_chunk=64, scan_chunk=64, loss_chunk=256)
 
+    resuming = args.resume is not None and checkpoint_exists(args.resume)
+    if resuming:
+        _adopt_resume_meta(args)
+
     dc_cfg = DCS3GDConfig(
         learning_rate=args.lr, momentum=args.momentum, lambda0=args.lambda0,
         warmup_steps=max(int(args.warmup_frac * args.steps), 1),
         total_steps=args.steps,
         local_optimizer=args.local_optimizer or "momentum",
+        ssp_threshold=args.ssp_threshold,
     )
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
+                        reducer=args.reducer, staleness=args.staleness,
+                        use_kernels=args.use_kernels)
+    engine = Engine(model, alg)
+    state = alg.init(params)
 
     data = SyntheticLMDataset(cfg.vocab_size, args.seq, seed=args.seed)
 
-    alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
-                        reducer=args.reducer, use_kernels=args.use_kernels)
-    state = alg.init(params)
-    step_fn = jax.jit(partial(alg.step, loss_fn=model.loss),
-                      donate_argnums=0)
-
     start = 0
-    if args.resume and Path(args.resume).exists():
-        state = restore_pytree(args.resume, state)
+    if resuming:
+        state = engine.restore(args.resume, state)
         start = int(state.step)
         print(f"[train] resumed from {args.resume} at step {start}")
 
     print(f"[train] {cfg.name} ({n_params/1e6:.1f}M params) algo={alg.name} "
           f"reducer={alg.reducer.name if hasattr(alg, 'reducer') else '-'} "
+          f"staleness="
+          f"{alg.staleness.name if hasattr(alg, 'staleness') else '-'} "
           f"W={args.workers} b={args.batch_per_worker} seq={args.seq}")
 
-    history = []
-    t0 = time.time()
-    for it in range(start, args.steps):
-        batch = worker_batches(data, it, args.workers, args.batch_per_worker)
-        state, metrics = step_fn(state, batch)
-        if it % args.log_every == 0 or it == args.steps - 1:
-            m = {k: float(v) for k, v in metrics.items()}
-            m["step"] = it
-            m["wall_s"] = round(time.time() - t0, 1)
-            history.append(m)
-            extra = ""
-            if "distance_norm" in m:
-                extra = (f" |D|={m['distance_norm']:.2e} "
-                         f"lam={m.get('lambda', 0):.3f}")
-            print(f"[train] step {it:5d} loss={m['loss']:.4f} "
-                  f"lr={m['lr']:.4f}{extra}")
-    wall = time.time() - t0
+    def batch_fn(it):
+        return worker_batches(data, it, args.workers, args.batch_per_worker)
+
+    state, history, wall = engine.fit(
+        state, batch_fn, steps=args.steps, start=start,
+        log_every=args.log_every)
 
     if args.ckpt:
-        save_pytree(args.ckpt, state, step=args.steps)
+        engine.save(args.ckpt, state, step=args.steps)
         print(f"[train] checkpoint -> {args.ckpt}")
 
     result = {

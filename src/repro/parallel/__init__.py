@@ -1,4 +1,5 @@
-from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
-                                     state_specs)
+from repro.parallel.sharding import (batch_specs, cache_specs, opt_specs,
+                                     param_specs, train_state_specs)
 
-__all__ = ["batch_specs", "cache_specs", "param_specs", "state_specs"]
+__all__ = ["batch_specs", "cache_specs", "opt_specs", "param_specs",
+           "train_state_specs"]

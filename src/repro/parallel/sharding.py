@@ -124,42 +124,8 @@ def param_specs(cfg: ModelConfig, params: PyTree, *, model_size: int,
     return jax.tree_util.tree_map_with_path(spec_of, params)
 
 
-def state_specs(cfg: ModelConfig, state: Any, *, model_size: int,
-                worker_axes: Optional[Tuple[str, ...]]) -> Any:
-    """Specs for a training state: params/opt/comm share the param layout
-    (+ worker axis where present).
-
-    Accepts the generic `repro.core.api.TrainState` (pass
-    ``worker_axes=None`` for algorithms with ``worker_sharded=False``) as
-    well as the deprecated DCS3GDState/SSGDState NamedTuples."""
-    import repro.core.dc_s3gd as dc
-    import repro.core.ssgd as ssgd
-    from repro.core.api import TrainState
-
-    if isinstance(state, TrainState):
-        ps = param_specs(cfg, state.params, model_size=model_size,
-                         worker_axes=worker_axes)
-        opt = _like_params(cfg, state.opt, model_size, worker_axes)
-        comm = {k: param_specs(cfg, v, model_size=model_size,
-                               worker_axes=worker_axes)
-                for k, v in state.comm.items()}
-        return TrainState(ps, opt, comm, P())
-    if isinstance(state, dc.DCS3GDState):
-        ps = param_specs(cfg, state.params, model_size=model_size,
-                         worker_axes=worker_axes)
-        opt = _like_params(cfg, state.opt, model_size, worker_axes)
-        dp = param_specs(cfg, state.delta_prev, model_size=model_size,
-                         worker_axes=worker_axes)
-        return dc.DCS3GDState(ps, opt, dp, P())
-    if isinstance(state, ssgd.SSGDState):
-        ps = param_specs(cfg, state.params, model_size=model_size,
-                         worker_axes=None)
-        opt = _like_params(cfg, state.opt, model_size, None)
-        return ssgd.SSGDState(ps, opt, P())
-    raise TypeError(type(state))
-
-
-def _like_params(cfg, opt_state, model_size, worker_axes):
+def opt_specs(cfg: ModelConfig, opt_state: Any, *, model_size: int,
+              worker_axes: Optional[Tuple[str, ...]] = None) -> Any:
     """Optimizer slots mirror the param tree one level down ({'m': params},
     plus scalar 't' for adam)."""
     def build(sub):
@@ -169,6 +135,29 @@ def _like_params(cfg, opt_state, model_size, worker_axes):
     for k, v in opt_state.items():
         out[k] = P() if k == "t" else build(v)
     return out
+
+
+def train_state_specs(cfg: ModelConfig, state: Any, *, model_size: int,
+                      worker_axes: Optional[Tuple[str, ...]],
+                      comm_overrides: Optional[dict] = None) -> Any:
+    """Shared builder behind the per-algorithm ``state_specs`` hooks.
+
+    params/opt/comm share the param layout (+ worker axis where the
+    algorithm asked for one); ``comm_overrides`` supplies ready-made spec
+    subtrees for comm entries that do NOT mirror the param tree (e.g. a
+    staleness policy's progress counters)."""
+    from repro.core.api import TrainState
+
+    overrides = comm_overrides or {}
+    ps = param_specs(cfg, state.params, model_size=model_size,
+                     worker_axes=worker_axes)
+    opt = opt_specs(cfg, state.opt, model_size=model_size,
+                    worker_axes=worker_axes)
+    comm = {k: overrides[k] if k in overrides
+            else param_specs(cfg, v, model_size=model_size,
+                             worker_axes=worker_axes)
+            for k, v in state.comm.items()}
+    return TrainState(ps, opt, comm, P())
 
 
 def batch_specs(cfg: ModelConfig, batch: PyTree, *,

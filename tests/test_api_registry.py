@@ -16,7 +16,6 @@ from repro.core.api import TrainState
 from repro.core.correction import dc_correct
 from repro.core.types import DCS3GDConfig
 from repro.core import dc_s3gd as dc_mod
-from repro.core import ssgd as ssgd_mod
 from repro.optim.local import init_local_state, local_update
 
 from helpers import quadratic_problem, stack_batches
@@ -127,23 +126,6 @@ def test_ssgd_registry_parity_bitwise_5_steps():
         assert bool(jnp.array_equal(m["loss"], loss)), f"loss step {t}"
 
 
-def test_deprecated_shims_match_class():
-    """The module-level init/*_step shims and the registry path are the
-    same computation on the same state (bitwise)."""
-    loss_fn, init, _, batch_fn = quadratic_problem(n=8, seed=1)
-    alg = registry.make("dc_s3gd", CFG, n_workers=W)
-    st_new = alg.init(init)
-    st_old = dc_mod.init(init, W, CFG)
-    for t in range(3):
-        batch = stack_batches(batch_fn, t, W)
-        st_new, m_new = alg.step(st_new, batch, loss_fn=loss_fn)
-        st_old, m_old = dc_mod.dc_s3gd_step(st_old, batch, loss_fn=loss_fn,
-                                            cfg=CFG)
-    assert _tree_bitwise_equal(st_new.params, st_old.params)
-    assert _tree_bitwise_equal(st_new.comm["delta_prev"], st_old.delta_prev)
-    assert bool(jnp.array_equal(m_new["loss"], m_old["loss"]))
-
-
 def test_stale_is_dc_s3gd_with_lambda0_zero():
     """"stale" zeroes the compensation regardless of cfg.lambda0 and is
     bitwise the lambda0=0 DC-S3GD trajectory."""
@@ -175,6 +157,8 @@ def test_registry_exposes_all_algorithms():
     assert set(registry.names(registry.LOCAL_OPTIMIZER)) >= {
         "momentum", "nesterov", "lars", "adam"}
     assert set(registry.names(registry.COMPENSATOR)) >= {"dc", "none"}
+    assert set(registry.names(registry.STALENESS_POLICY)) >= {
+        "fixed", "dynamic_ssp"}
 
 
 @pytest.mark.parametrize("name", ["dc_s3gd", "ssgd", "stale", "dc_asgd"])
@@ -183,7 +167,7 @@ def test_registry_roundtrip_every_algorithm(name):
     loss_fn, init, _, batch_fn = quadratic_problem(n=8, seed=3)
     alg = registry.make(name, CFG, n_workers=W)
     assert alg.name == name
-    assert isinstance(alg.worker_sharded, bool)
+    assert callable(alg.state_specs) and callable(alg.batch_specs)
     state = alg.init(init)
     assert isinstance(state, TrainState)
     for t in range(3):

@@ -1,15 +1,20 @@
-"""DC-S3GD algorithm invariants (paper Algorithm 1 / Eq. 7-12)."""
+"""DC-S3GD algorithm invariants (paper Algorithm 1 / Eq. 7-12), exercised
+through the `DistributedOptimizer` protocol surface (`registry.make`)."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import dc_s3gd, ssgd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 
 from helpers import quadratic_problem, stack_batches, tree_allclose
 
 CFG = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
                    weight_decay=0.0, total_steps=1)
+
+
+def _alg(cfg=CFG, W=4, **kw):
+    return registry.make("dc_s3gd", cfg, n_workers=W, **kw)
 
 
 def serial_momentum_sgd(loss_fn, params, batches, lr, mu, steps):
@@ -25,11 +30,12 @@ def test_single_worker_no_compensation_equals_momentum_sgd():
     """W=1: Δ̄w = Δw_i, D_i = 0, correction vanishes — DC-S3GD must reduce
     exactly to serial momentum SGD regardless of lambda0."""
     loss_fn, init, _, batch_fn = quadratic_problem()
-    state = dc_s3gd.init(init, 1, CFG)
+    alg = _alg(W=1)
+    state = alg.init(init)
     steps = 5
     for t in range(steps):
         batch = stack_batches(batch_fn, t, 1)
-        state, _ = dc_s3gd.dc_s3gd_step(state, batch, loss_fn=loss_fn, cfg=CFG)
+        state, _ = alg.step(state, batch, loss_fn=loss_fn)
     batches = [batch_fn(t, 0) for t in range(steps)]
     ref = serial_momentum_sgd(loss_fn, init, batches, CFG.learning_rate,
                               CFG.momentum, steps)
@@ -41,12 +47,12 @@ def test_identical_batches_keep_workers_identical():
     all workers follow the single-worker trajectory exactly."""
     loss_fn, init, _, batch_fn = quadratic_problem()
     W = 4
-    state = dc_s3gd.init(init, W, CFG)
+    alg = _alg(W=W)
+    state = alg.init(init)
     for t in range(6):
         one = batch_fn(t, 0)
         batch = {k: jnp.stack([v] * W) for k, v in one.items()}
-        state, metrics = dc_s3gd.dc_s3gd_step(state, batch, loss_fn=loss_fn,
-                                              cfg=CFG)
+        state, metrics = alg.step(state, batch, loss_fn=loss_fn)
         assert metrics["distance_norm"] < 1e-6
     w = state.params["w"]
     for i in range(1, W):
@@ -62,12 +68,13 @@ def test_eq12_common_base():
     average' base) must be IDENTICAL across workers after every step."""
     loss_fn, init, _, batch_fn = quadratic_problem()
     W = 4
-    state = dc_s3gd.init(init, W, CFG)
+    alg = _alg(W=W)
+    state = alg.init(init)
     for t in range(5):
         batch = stack_batches(batch_fn, t, W)
-        state, _ = dc_s3gd.dc_s3gd_step(state, batch, loss_fn=loss_fn, cfg=CFG)
+        state, _ = alg.step(state, batch, loss_fn=loss_fn)
         base = jax.tree.map(lambda p, d: p - d, state.params,
-                            state.delta_prev)
+                            state.comm["delta_prev"])
         b = base["w"]
         for i in range(1, W):
             assert jnp.allclose(b[0], b[i], atol=1e-5), f"step {t} worker {i}"
@@ -79,14 +86,12 @@ def test_first_step_is_plain_sgd_prologue():
     loss_fn, init, _, batch_fn = quadratic_problem()
     W = 3
     batch = stack_batches(batch_fn, 0, W)
-    s_a = dc_s3gd.init(init, W, CFG)
-    s_b = dc_s3gd.init(init, W, DCS3GDConfig(learning_rate=0.1, momentum=0.9,
-                                             lambda0=0.0, weight_decay=0.0))
-    s_a, ma = dc_s3gd.dc_s3gd_step(s_a, batch, loss_fn=loss_fn, cfg=CFG)
-    s_b, mb = dc_s3gd.dc_s3gd_step(
-        s_b, batch, loss_fn=loss_fn,
-        cfg=DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.0,
-                         weight_decay=0.0))
+    cfg0 = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.0,
+                        weight_decay=0.0)
+    a = _alg(W=W)
+    b = _alg(cfg0, W=W)
+    s_a, ma = a.step(a.init(init), batch, loss_fn=loss_fn)
+    s_b, mb = b.step(b.init(init), batch, loss_fn=loss_fn)
     assert tree_allclose(s_a.params, s_b.params)
     assert float(ma["distance_norm"]) == 0.0
 
@@ -96,14 +101,14 @@ def test_convergence_on_quadratic():
     cfg = DCS3GDConfig(learning_rate=0.3, momentum=0.9, lambda0=0.2,
                        weight_decay=0.0)
     W = 4
-    state = dc_s3gd.init(init, W, cfg)
-    step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(s, b, loss_fn=loss_fn,
-                                                     cfg=cfg))
+    alg = _alg(cfg, W=W)
+    state = alg.init(init)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
     losses = []
     for t in range(300):
         state, m = step(state, stack_batches(batch_fn, t, W))
         losses.append(float(m["loss"]))
-    avg = dc_s3gd.average_params(state)
+    avg = alg.eval_params(state)
     assert losses[-1] < 1e-3, losses[-10:]
     assert jnp.linalg.norm(avg["w"] - w_star) < 0.1
 
@@ -118,12 +123,12 @@ def test_compensation_beats_uncompensated_stale():
     def run(lambda0, lr=0.9, steps=150):
         cfg = DCS3GDConfig(learning_rate=lr, momentum=0.9, lambda0=lambda0,
                            weight_decay=0.0)
-        state = dc_s3gd.init(init, W, cfg)
-        step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(
-            s, b, loss_fn=loss_fn, cfg=cfg))
+        alg = _alg(cfg, W=W)
+        state = alg.init(init)
+        step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
         for t in range(steps):
             state, m = step(state, stack_batches(batch_fn, t, W))
-        avg = dc_s3gd.average_params(state)
+        avg = alg.eval_params(state)
         return float(jnp.linalg.norm(avg["w"] - w_star))
 
     err_dc = run(0.2)
@@ -134,13 +139,14 @@ def test_compensation_beats_uncompensated_stale():
 def test_metrics_and_spread():
     loss_fn, init, _, batch_fn = quadratic_problem()
     W = 4
-    state = dc_s3gd.init(init, W, CFG)
+    alg = _alg(W=W)
+    state = alg.init(init)
     for t in range(3):
-        state, m = dc_s3gd.dc_s3gd_step(state, stack_batches(batch_fn, t, W),
-                                        loss_fn=loss_fn, cfg=CFG)
+        state, m = alg.step(state, stack_batches(batch_fn, t, W),
+                            loss_fn=loss_fn)
     assert set(m) >= {"loss", "lr", "wd", "lambda", "distance_norm",
                       "delta_norm"}
-    assert float(dc_s3gd.worker_spread(state)) > 0.0
+    assert float(alg.spread(state)) > 0.0
 
 
 def test_comm_dtype_bf16_close_to_f32():
@@ -148,12 +154,12 @@ def test_comm_dtype_bf16_close_to_f32():
     W = 4
     cfg16 = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
                          weight_decay=0.0, comm_dtype="bfloat16")
-    s32 = dc_s3gd.init(init, W, CFG)
-    s16 = dc_s3gd.init(init, W, cfg16)
+    a32, a16 = _alg(W=W), _alg(cfg16, W=W)
+    s32, s16 = a32.init(init), a16.init(init)
     for t in range(5):
         batch = stack_batches(batch_fn, t, W)
-        s32, _ = dc_s3gd.dc_s3gd_step(s32, batch, loss_fn=loss_fn, cfg=CFG)
-        s16, _ = dc_s3gd.dc_s3gd_step(s16, batch, loss_fn=loss_fn, cfg=cfg16)
+        s32, _ = a32.step(s32, batch, loss_fn=loss_fn)
+        s16, _ = a16.step(s16, batch, loss_fn=loss_fn)
     d = jnp.linalg.norm(s32.params["w"] - s16.params["w"])
     n = jnp.linalg.norm(s32.params["w"])
     assert d / n < 0.05, (float(d), float(n))
@@ -163,36 +169,35 @@ def test_ssgd_baseline_converges_and_differs():
     loss_fn, init, w_star, batch_fn = quadratic_problem(n=12)
     cfg = DCS3GDConfig(learning_rate=0.3, momentum=0.9, weight_decay=0.0)
     W = 4
-    state = ssgd.init(init, cfg)
-    step = jax.jit(lambda s, b: ssgd.ssgd_step(s, b, loss_fn=loss_fn,
-                                               cfg=cfg))
+    alg = registry.make("ssgd", cfg)
+    state = alg.init(init)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
     for t in range(300):
         state, m = step(state, stack_batches(batch_fn, t, W))
     assert jnp.linalg.norm(state.params["w"] - w_star) < 0.1
 
 
 def test_fused_kernel_path_matches_reference():
-    """use_fused_kernels=True (Pallas interpret on CPU) must reproduce the
+    """use_kernels=True (Pallas interpret on CPU) must reproduce the
     reference step bit-for-bit-ish."""
     loss_fn, init, _, batch_fn = quadratic_problem(n=20, seed=2)
     cfg = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
                        weight_decay=1e-3)
     W = 3
-    s_ref = dc_s3gd.init(init, W, cfg)
-    s_fused = dc_s3gd.init(init, W, cfg)
+    a_ref = _alg(cfg, W=W)
+    a_fused = _alg(cfg, W=W, use_kernels=True)
+    s_ref, s_fused = a_ref.init(init), a_fused.init(init)
     for t in range(4):
         batch = stack_batches(batch_fn, t, W)
-        s_ref, m_ref = dc_s3gd.dc_s3gd_step(s_ref, batch, loss_fn=loss_fn,
-                                            cfg=cfg)
-        s_fused, m_fused = dc_s3gd.dc_s3gd_step(
-            s_fused, batch, loss_fn=loss_fn, cfg=cfg, use_fused_kernels=True)
+        s_ref, m_ref = a_ref.step(s_ref, batch, loss_fn=loss_fn)
+        s_fused, m_fused = a_fused.step(s_fused, batch, loss_fn=loss_fn)
         # tolerance: the blocked-kernel reduction order differs from
         # jnp.sum's, and lambda = 0.2*|g|/|c| divides by a small |c| early
         # in training, amplifying reduction-order noise
         assert jnp.allclose(s_ref.params["w"], s_fused.params["w"],
                             atol=1e-4), t
-        assert jnp.allclose(s_ref.delta_prev["w"], s_fused.delta_prev["w"],
-                            atol=1e-4)
+        assert jnp.allclose(s_ref.comm["delta_prev"]["w"],
+                            s_fused.comm["delta_prev"]["w"], atol=1e-4)
         rel = abs(float(m_ref["lambda"]) - float(m_fused["lambda"])) / \
             max(float(m_ref["lambda"]), 1e-9)
         assert rel < 1e-2 or float(m_ref["lambda"]) < 1e-6
@@ -203,12 +208,12 @@ def test_microbatched_step_matches_full_batch():
     loss_fn, init, _, batch_fn = quadratic_problem(n=8)
     cfg1 = DCS3GDConfig(learning_rate=0.1, weight_decay=0.0)
     cfg4 = DCS3GDConfig(learning_rate=0.1, weight_decay=0.0, microbatches=4)
-    s1 = dc_s3gd.init(init, 2, cfg1)
-    s4 = dc_s3gd.init(init, 2, cfg4)
+    a1, a4 = _alg(cfg1, W=2), _alg(cfg4, W=2)
+    s1, s4 = a1.init(init), a4.init(init)
     for t in range(3):
         b = stack_batches(batch_fn, t, 2, bs=8)
-        s1, m1 = dc_s3gd.dc_s3gd_step(s1, b, loss_fn=loss_fn, cfg=cfg1)
-        s4, m4 = dc_s3gd.dc_s3gd_step(s4, b, loss_fn=loss_fn, cfg=cfg4)
+        s1, m1 = a1.step(s1, b, loss_fn=loss_fn)
+        s4, m4 = a4.step(s4, b, loss_fn=loss_fn)
     assert jnp.allclose(s1.params["w"], s4.params["w"], atol=1e-5)
     assert abs(float(m1["loss"]) - float(m4["loss"])) < 1e-5
 
@@ -221,11 +226,11 @@ def test_section_v_local_optimizers(opt):
                        momentum=0.9, lambda0=0.2, weight_decay=0.0,
                        local_optimizer=opt)
     W = 4
-    state = dc_s3gd.init(init, W, cfg)
-    step = jax.jit(lambda s, b: dc_s3gd.dc_s3gd_step(s, b, loss_fn=loss_fn,
-                                                     cfg=cfg))
+    alg = _alg(cfg, W=W)
+    state = alg.init(init)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss_fn))
     for t in range(250):
         state, m = step(state, stack_batches(batch_fn, t, W))
-    avg = dc_s3gd.average_params(state)
+    avg = alg.eval_params(state)
     assert jnp.isfinite(m["loss"])
     assert jnp.linalg.norm(avg["w"] - w_star) < 0.3, opt

@@ -9,7 +9,7 @@ import pytest
 from jax import random
 
 from repro.configs import ARCHS, get_config, reduced
-from repro.core import dc_s3gd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig, MoEConfig, RGLRUConfig, SSMConfig
 from repro.models import attention, moe as moe_mod, rglru, ssm
 from repro.models.transformer import Model, chunked_xent
@@ -44,10 +44,10 @@ def test_smoke_forward_and_train_step(arch):
     dc_cfg = DCS3GDConfig(learning_rate=0.01, momentum=0.9,
                           weight_decay=1e-4)
     W = 2
-    state = dc_s3gd.init(params, W, dc_cfg)
+    alg = registry.make("dc_s3gd", dc_cfg, n_workers=W)
+    state = alg.init(params)
     wbatch = {k: jnp.stack([v, v]) for k, v in batch.items()}
-    state2, metrics = dc_s3gd.dc_s3gd_step(state, wbatch,
-                                           loss_fn=m.loss, cfg=dc_cfg)
+    state2, metrics = alg.step(state, wbatch, loss_fn=m.loss)
     assert bool(jnp.isfinite(metrics["loss"]))
     moved = any(not jnp.allclose(a, b) for a, b in
                 zip(jax.tree.leaves(state.params),

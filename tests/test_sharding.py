@@ -3,7 +3,8 @@
 These run WITHOUT building the production mesh (pure spec construction):
 rank alignment, divisibility of every sharded dim by the mesh axis, and
 worker-axis placement — the cheap invariants whose violations are exactly
-what makes a 512-device lower() fail.
+what makes a 512-device lower() fail.  Specs come from the per-algorithm
+``state_specs`` / ``batch_specs`` hooks, the only sharding seam.
 """
 import jax
 import jax.numpy as jnp
@@ -11,16 +12,20 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core import dc_s3gd
+from repro.core import registry
+from repro.core.api import MeshAxes
 from repro.core.types import DCS3GDConfig, INPUT_SHAPES
 from repro.launch import specs as S
 from repro.models.transformer import Model
-from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
-                                     state_specs)
+from repro.parallel.sharding import cache_specs, param_specs
 
 from helpers import ALL_ARCHS
 
 MESH_SHAPE = {"data": 16, "model": 16, "pod": 2}
+
+AXES_POD = MeshAxes(worker=("data",), model="model", model_size=16)
+AXES_MULTIPOD = MeshAxes(worker=("pod", "data"), model="model",
+                         model_size=16)
 
 
 def _axis_size(ax):
@@ -51,17 +56,18 @@ def test_train_state_specs_divisible(arch, multipod):
     cfg = S.dryrun_model_config(get_config(arch))
     model = Model(cfg, remat=True)
     W = 32 if multipod else 16
-    waxes = ("pod", "data") if multipod else "data"
+    axes = AXES_MULTIPOD if multipod else AXES_POD
     dc_cfg = DCS3GDConfig()
-    state = S.abstract_train_state(model, W, dc_cfg)
-    spec = state_specs(cfg, state, model_size=16, worker_axes=waxes)
+    alg = registry.make("dc_s3gd", dc_cfg, n_workers=W)
+    state = S.abstract_train_state(model, W, dc_cfg, alg)
+    spec = alg.state_specs(cfg, state, axes)
     _check_divisible(state.params, spec.params, f"{arch}.params")
     _check_divisible(state.comm["delta_prev"], spec.comm["delta_prev"],
                      f"{arch}.delta")
     # worker axis present on every param leaf
     for sp in jax.tree.leaves(spec.params,
                               is_leaf=lambda x: isinstance(x, P)):
-        assert tuple(sp)[0] == waxes, sp
+        assert tuple(sp)[0] == axes.worker_spec, sp
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
@@ -90,8 +96,9 @@ def test_serve_specs_divisible(arch, shape_name):
 def test_train_batch_specs_divisible(arch):
     cfg = S.dryrun_model_config(get_config(arch))
     shape = INPUT_SHAPES["train_4k"]
+    alg = registry.make("dc_s3gd", DCS3GDConfig(), n_workers=16)
     batch = S.train_batch_specs(cfg, shape, 16)
-    spec = batch_specs(cfg, batch, worker_axes="data")
+    spec = alg.batch_specs(cfg, batch, AXES_POD)
     _check_divisible(batch, spec, f"{arch}.batch")
 
 
@@ -105,29 +112,22 @@ def test_head_padding_only_when_needed():
 
 def test_small_mesh_end_to_end_jit():
     """Actually run one sharded DC-S3GD step on a 1x1 mesh (the only real
-    device) — validates spec trees agree with the jit API end to end."""
+    device) through the Engine — validates that the hook-derived sharding
+    trees agree with the jit API end to end."""
     from repro.configs import reduced
+    from repro.launch.engine import Engine
     cfg = reduced(get_config("qwen3-0.6b"))
     model = Model(cfg, remat=False, q_chunk=8, kv_chunk=8, scan_chunk=8,
                   loss_chunk=8)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     dc_cfg = DCS3GDConfig(learning_rate=0.01)
-    params = model.init(jax.random.PRNGKey(0))
-    state = dc_s3gd.init(params, 2, dc_cfg)
-    spec = state_specs(cfg, state, model_size=1, worker_axes="data")
-    from jax.sharding import NamedSharding
-    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
-                      is_leaf=lambda x: isinstance(x, P))
+    alg = registry.make("dc_s3gd", dc_cfg, n_workers=2)
+    engine = Engine(model, alg, mesh=mesh)
+    state = alg.init(model.init(jax.random.PRNGKey(0)))
     batch = {
         "tokens": jnp.zeros((2, 2, 16), jnp.int32),
         "labels": jnp.zeros((2, 2, 16), jnp.int32),
     }
-    bspec = batch_specs(cfg, batch, worker_axes="data")
-    bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspec,
-                       is_leaf=lambda x: isinstance(x, P))
-    step = jax.jit(
-        lambda st, b: dc_s3gd.dc_s3gd_step(st, b, loss_fn=model.loss,
-                                           cfg=dc_cfg),
-        in_shardings=(sh, bsh), out_shardings=(sh, None))
+    step = engine.jit_train_step(state, batch, donate=False)
     state2, metrics = step(state, batch)
     assert bool(jnp.isfinite(metrics["loss"]))

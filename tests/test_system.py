@@ -5,13 +5,13 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.core import dc_asgd
+from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.launch.train import build_argparser, run
 from repro.launch.serve import generate
 from repro.models.transformer import Model
 
-from helpers import quadratic_problem
+from helpers import quadratic_problem, stack_batches
 
 
 def _run_train(algo, steps=6, arch="qwen3-0.6b", **kw):
@@ -59,6 +59,43 @@ def test_serve_generate_greedy_deterministic():
     assert int(a.max()) < cfg.vocab_size  # pad logits masked
 
 
+def test_serve_generate_scan_matches_per_token_loop():
+    """The single-trace `lax.scan` decode loop must reproduce the
+    dispatch-per-token reference exactly, for both samplers."""
+    cfg = reduced(get_config("qwen3-0.6b"))
+    m = Model(cfg, remat=False, q_chunk=16, kv_chunk=16, scan_chunk=16)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab_size)
+
+    def reference(gen, temperature, key):
+        # frozen transcript of the pre-scan per-token loop
+        B, P = prompts.shape
+        logits, cache = m.prefill(params, {"tokens": prompts},
+                                  cache_len=P + gen + 1)
+
+        def sample(lg, k, t):
+            if t <= 0.0:
+                return jnp.argmax(lg, axis=-1)
+            return jax.random.categorical(k, lg / t, axis=-1)
+
+        out, tok = [], sample(logits, key, temperature)
+        for t in range(gen):
+            out.append(tok)
+            key, sub = jax.random.split(key)
+            step = {"tokens": tok[:, None], "pos": jnp.int32(P + t)}
+            logits, cache = m.decode_step(params, cache, step)
+            tok = sample(logits, sub, temperature)
+        return jnp.stack(out, axis=1)
+
+    k = jax.random.PRNGKey(7)
+    greedy = generate(m, params, prompts, gen=5, temperature=0.0, key=k)
+    assert jnp.array_equal(greedy, reference(5, 0.0, k))
+    hot = generate(m, params, prompts, gen=5, temperature=0.8, key=k)
+    assert jnp.array_equal(hot, reference(5, 0.8, k))
+    assert not jnp.array_equal(greedy, hot)  # sampler actually pluggable
+
+
 def test_serve_generate_ssm():
     cfg = reduced(get_config("falcon-mamba-7b"))
     m = Model(cfg, remat=False, q_chunk=16, kv_chunk=16, scan_chunk=16)
@@ -78,13 +115,15 @@ def test_dc_asgd_simulator_and_compensation():
     W = 8
 
     def run_sim(compensate):
-        state = dc_asgd.init(init, W, cfg)
+        alg = registry.make("dc_asgd", cfg, n_workers=W,
+                            compensator="dc" if compensate else "none")
+        state = alg.init(init)
         for t in range(160):
-            wid = t % W
-            state, m = dc_asgd.dc_asgd_step(
-                state, wid, batch_fn(t, wid), loss_fn=loss_fn, cfg=cfg,
-                compensate=compensate)
-        return float(jnp.linalg.norm(state.ps_params["w"] - w_star))
+            # protocol batch layout: the round-robin worker t % W consumes
+            # its own shard of the stacked (W, b, ...) batch
+            state, m = alg.step(state, stack_batches(batch_fn, t, W),
+                                loss_fn=loss_fn)
+        return float(jnp.linalg.norm(alg.eval_params(state)["w"] - w_star))
 
     err_dc = run_sim(True)
     err_async = run_sim(False)
