@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   staleness_growth     §III-D.2: ||D_i|| vs ||w_PS − w_i|| growth in N
   kernels_bench        Pallas kernel microbenchmarks vs XLA baselines
   roofline_table       §Roofline rows from the dry-run artifacts
+  step_time            measured ms/step across the algo x reducer x
+                       kernels x buckets grid; --json writes
+                       BENCH_step_time.json (the perf trajectory)
 
 Algorithm / reduce-topology selection is uniform: ``--algo`` (repeatable)
 and ``--reducer`` pass through to every benchmark, which builds its
@@ -37,6 +40,11 @@ def build_argparser():
                     help="reduce topology for every trained benchmark")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark modules")
+    ap.add_argument("--json", action="store_true",
+                    help="benchmarks that support it also write a JSON "
+                         "artifact (step_time -> BENCH_step_time.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal iteration counts (CI artifact run)")
     return ap
 
 
@@ -46,11 +54,12 @@ def main(argv=None) -> None:
     args = build_argparser().parse_args(argv)
 
     from benchmarks import (eq13_14_timing, fig1_error_curves, kernels_bench,
-                            roofline_table, staleness_growth,
+                            roofline_table, staleness_growth, step_time,
                             table1_convergence)
     mods = {m.__name__.split(".")[-1]: m
             for m in (table1_convergence, fig1_error_curves, eq13_14_timing,
-                      staleness_growth, kernels_bench, roofline_table)}
+                      staleness_growth, kernels_bench, roofline_table,
+                      step_time)}
     selected = list(mods) if args.only is None else \
         [s.strip() for s in args.only.split(",")]
     unknown = [s for s in selected if s not in mods]

@@ -1,0 +1,145 @@
+"""Step-time benchmark — the first entry in the perf trajectory.
+
+Times the jitted train step for the full hot-path grid
+
+    {dc_s3gd, ssgd} x {mean_allreduce, gossip, hierarchical}
+                    x {use_kernels on/off} x {buckets 0/BUCKETS}
+
+on the reduced transformer (the CI smoke model; on real hardware pass a
+bigger ``--arch`` through ``repro.launch.train`` instead) and, with
+``--json``, writes ``BENCH_step_time.json``: one row per config with
+measured ms/step plus the per-step HLO ``reduce``/``convert`` op counts
+of the lowered step — the static evidence that bucketing collapses
+per-leaf wire ops (Dynamic-SSP's lesson: measure per-step cost, don't
+assume it).
+
+Step times are measured with buffer donation in effect (the Engine's
+jitted step donates the TrainState), so the numbers include the
+zero-copy state reuse the bucketed path is designed around.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from benchmarks.common import emit, requested_algos
+
+BUCKETS = 4
+REDUCERS = ("mean_allreduce", "gossip", "hierarchical")
+FULL_ALGOS = ("dc_s3gd", "ssgd")
+# the committed perf-trajectory baseline is only ever written by a full
+# (non-smoke, full-grid) run; smoke/partial runs go to a sibling name so
+# a CI-reproduction from the repo root can't clobber the baseline
+JSON_NAME = "BENCH_step_time.json"
+SMOKE_JSON_NAME = "BENCH_step_time.smoke.json"
+
+
+def _build(algo: str, reducer: str, use_kernels: bool, buckets: int,
+           model, n_workers: int, steps: int):
+    from repro.core import registry
+    from repro.core.types import DCS3GDConfig
+    cfg = DCS3GDConfig(learning_rate=0.05, momentum=0.9, lambda0=0.2,
+                       warmup_steps=1, total_steps=max(steps, 2))
+    return registry.make(algo, cfg, n_workers=n_workers, reducer=reducer,
+                         use_kernels=use_kernels, buckets=buckets)
+
+
+def _hlo_counts(step_fn, state, batch) -> dict:
+    txt = step_fn.lower(state, batch).as_text()
+    return {"hlo_reduce_ops": txt.count("stablehlo.reduce"),
+            "hlo_convert_ops": txt.count("stablehlo.convert")}
+
+
+def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
+                model, data, *, n_workers: int, batch_per_worker: int,
+                steps: int, warmup: int) -> dict:
+    from repro.data import worker_batches
+    from repro.launch.engine import Engine
+
+    alg = _build(algo, reducer, use_kernels, buckets, model, n_workers,
+                 steps)
+    engine = Engine(model, alg)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    step_fn = engine.jit_train_step()
+    counts = _hlo_counts(step_fn, state,
+                         worker_batches(data, 0, n_workers,
+                                        batch_per_worker))
+    for it in range(warmup):
+        state, metrics = step_fn(state,
+                                 worker_batches(data, it, n_workers,
+                                                batch_per_worker))
+    jax.block_until_ready(metrics)
+    t0 = time.perf_counter()
+    for it in range(warmup, warmup + steps):
+        state, metrics = step_fn(state,
+                                 worker_batches(data, it, n_workers,
+                                                batch_per_worker))
+    jax.block_until_ready((state, metrics))
+    ms = (time.perf_counter() - t0) / steps * 1e3
+    return {"algo": algo, "reducer": reducer, "use_kernels": use_kernels,
+            "buckets": buckets, "ms_per_step": round(ms, 3),
+            "steps": steps, **counts}
+
+
+def main(args=None):
+    from repro.configs import get_config, reduced
+    from repro.data import SyntheticLMDataset
+    from repro.models.transformer import Model
+
+    smoke = bool(getattr(args, "smoke", False))
+    steps = 2 if smoke else 5
+    warmup = 1
+    W, bpw, seq = 2, 2, 32
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    model = Model(cfg, remat=False, q_chunk=16, kv_chunk=16, scan_chunk=16,
+                  loss_chunk=64)
+    data = SyntheticLMDataset(cfg.vocab_size, seq, seed=0)
+
+    algos = [a for a in requested_algos(args, default=FULL_ALGOS)
+             if a in FULL_ALGOS]
+    rows = []
+    for algo in algos:
+        for reducer in REDUCERS:
+            for buckets in (0, BUCKETS):
+                # the Pallas tail only exists on dc_s3gd (ssgd has no
+                # update tail to fuse) — skip the redundant axis there
+                for uk in ((False, True) if algo == "dc_s3gd"
+                           else (False,)):
+                    row = time_config(algo, reducer, uk, buckets, model,
+                                      data, n_workers=W,
+                                      batch_per_worker=bpw, steps=steps,
+                                      warmup=warmup)
+                    rows.append(row)
+                    emit(f"step_time_{algo}_{reducer}"
+                         f"{'_kernels' if uk else ''}_b{buckets}",
+                         row["ms_per_step"] * 1e3,
+                         f"reduce_ops={row['hlo_reduce_ops']};"
+                         f"convert_ops={row['hlo_convert_ops']}")
+
+    if getattr(args, "json", False):
+        out = {
+            "bench": "step_time",
+            "model": cfg.name,
+            "n_workers": W, "batch_per_worker": bpw, "seq": seq,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": smoke,
+            "rows": rows,
+        }
+        full_grid = tuple(algos) == FULL_ALGOS
+        name = JSON_NAME if (not smoke and full_grid) else SMOKE_JSON_NAME
+        Path(name).write_text(json.dumps(out, indent=2))
+        print(f"# wrote {name} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    main(ap.parse_args())

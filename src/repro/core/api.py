@@ -94,7 +94,10 @@ class TrainState(NamedTuple):
 
 @runtime_checkable
 class LocalOptimizer(Protocol):
-    """U(g, eta, mu) — returns the *update* delta_w plus new slots."""
+    """U(g, eta, mu) — returns the *update* delta_w plus new slots.
+
+    ``axis0_is_worker`` marks worker-stacked (W, ...) trees so per-rank
+    behaviour (the weight-decay mask) is judged on canonical shapes."""
 
     name: str
 
@@ -102,7 +105,8 @@ class LocalOptimizer(Protocol):
         ...
 
     def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
-                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+                 schedules: Schedules, *, axis0_is_worker: bool = False
+                 ) -> Tuple[PyTree, PyTree]:
         ...
 
 

@@ -80,13 +80,22 @@ class DCS3GD:
     fixed one-step window).  ``use_kernels`` routes the
     correction+momentum+Eq.12 tail through the fused Pallas kernels
     (`repro.kernels`) — momentum + global-lambda mode only.
+
+    ``buckets > 0`` routes the hot path through a
+    `repro.parallel.buckets.BucketPlan`: the carried ``delta_prev`` (or
+    the mixed weights, for ``reduces_weights`` topologies) lives in a few
+    contiguous flat buffers, reducers run once per bucket, and the fused
+    tail launches one kernel per bucket.  ``buckets=0`` (default) is the
+    legacy per-leaf path; trajectories are pinned against it (see
+    ``docs/perf.md``).
     """
 
     name = "dc_s3gd"
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None, compensator=None,
-                 staleness=None, use_kernels: bool = False):
+                 staleness=None, use_kernels: bool = False,
+                 buckets: Optional[int] = None):
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -99,12 +108,25 @@ class DCS3GD:
         self.staleness = registry.make_staleness_policy(
             "fixed" if staleness is None else staleness, cfg)
         self.use_kernels = use_kernels
+        # flat-buffer comm bucketing (repro.parallel.buckets): >0 packs the
+        # wire state + fused tail into that many contiguous buckets; 0 is
+        # the legacy per-leaf path
+        self.buckets = int(cfg.buckets if buckets is None else buckets)
+        self._plan_cache: dict = {}
 
     # -- protocol -----------------------------------------------------------
 
     @property
     def _reduces_weights(self) -> bool:
         return bool(getattr(self.reducer, "reduces_weights", False))
+
+    def _plan(self, worker_params: PyTree):
+        """The (cached) static `BucketPlan` for this model, built from the
+        canonical per-worker shapes of a (W, ...) state tree.  Abstract
+        leaves work — the dry-run never allocates."""
+        from repro.parallel import buckets as B
+        return B.cached_plan(self._plan_cache, worker_params, self.buckets,
+                             strip_leading_axis=True)
 
     def init(self, params: PyTree) -> TrainState:
         cfg = self.cfg
@@ -114,8 +136,15 @@ class DCS3GD:
         opt = jax.tree.map(lambda x: x.astype(sdt) if x.ndim else x, opt)
         # weight-mixing reducers never read the carried deltas — don't
         # spend a params-sized (W, ...) tree on dead comm state
-        comm = {} if self._reduces_weights else {
-            "delta_prev": jax.tree.map(
+        if self._reduces_weights:
+            comm = {}
+        elif self.buckets:
+            # carried flat-buffer wire state: a few contiguous buckets
+            # instead of one leaf per parameter tensor
+            comm = {"delta_prev": self._plan(wp).zeros(
+                sdt, lead=(self.n_workers,))}
+        else:
+            comm = {"delta_prev": jax.tree.map(
                 lambda p: jnp.zeros_like(p, dtype=sdt), wp)}
         if not self.staleness.stateless:
             comm["staleness"] = self.staleness.init(self.n_workers)
@@ -133,6 +162,7 @@ class DCS3GD:
         cfg = self.cfg
         lr, wd = schedules(state.step, cfg)
         sched = {"lr": lr, "weight_decay": wd}
+        plan = self._plan(state.params) if self.buckets else None
 
         # --- MPI_Iallreduce: pluggable reduction over workers.  Depends
         # only on carried state, NOT on this step's gradients ->
@@ -140,10 +170,15 @@ class DCS3GD:
         # deltas (the paper's wire format — valid because the global mean
         # keeps the Eq. 12 base common); neighborhood reducers
         # (reduces_weights) mix the weights themselves, D-PSGD-style.
+        # With bucketing the reducer sees a handful of contiguous flat
+        # buffers instead of the param tree: one wire cast + one mean (or
+        # 2k rolls) per BUCKET, not per leaf.
         if self._reduces_weights:
-            w_red = self.reducer(state.params)
+            wire = plan.pack(state.params) if plan is not None \
+                else state.params
+            w_red = self.reducer(wire)
         else:
-            delta_prev = state.comm["delta_prev"]
+            delta_prev = state.comm["delta_prev"]   # bucketed when buckets>0
             delta_bar = self.reducer(delta_prev)
 
         # --- g_i = ∇l(w_i): per-worker gradients (the compute overlapped)
@@ -151,10 +186,11 @@ class DCS3GD:
 
         # --- MPI_Wait() / D_i = (1/N)·Δ̄w − Δw_i  (Eq. 9); for weight
         # reducers D_i = R(w)_i − w_i directly (same quantity: distance
-        # from my weights to my reduction target)
+        # from my weights to my reduction target).  With buckets, D stays
+        # in the flat-buffer representation until a consumer needs leaves.
         if self._reduces_weights:
             D = jax.tree.map(lambda rw, w: rw - w.astype(jnp.float32),
-                             w_red, state.params)
+                             w_red, wire)
         else:
             D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
                              delta_bar, delta_prev)
@@ -173,9 +209,11 @@ class DCS3GD:
                 wbar = jax.tree.map(
                     lambda p: jnp.mean(p.astype(jnp.float32), axis=0,
                                        keepdims=True), state.params)
-                return jax.tree.map(
+                Dt = jax.tree.map(
                     lambda wb, w: wb - w.astype(jnp.float32),
                     wbar, state.params)
+                # match the admitted branch's representation
+                return plan.pack(Dt) if plan is not None else Dt
 
             # lax.cond (not where): the revoked-window branch costs a full
             # params-tree mean — only pay it on the steps that take it
@@ -184,14 +222,24 @@ class DCS3GD:
 
         if self.use_kernels:
             return self._fused_tail(state, grads, D, loss, lr, wd,
-                                    pstate=pstate, pol_metrics=pol_metrics)
+                                    plan=plan, pstate=pstate,
+                                    pol_metrics=pol_metrics)
+
+        if plan is not None:
+            # per-leaf reference tail: leave the flat-buffer world here.
+            # The unpack is a static reshape/slice, so the bucketed wire is
+            # bitwise the per-leaf wire for mean-style reducers.
+            D = plan.unpack(D)
 
         # --- g̃_i = g_i + λ_i g_i⊙g_i⊙D_i  (Eq. 10 + 17)
         g_t, lam = self.compensator(grads, D, axis0_is_worker=True)
 
-        # --- Δw_i = U(g̃_i, η, μ)  (Eq. 11)
+        # --- Δw_i = U(g̃_i, η, μ)  (Eq. 11).  axis0_is_worker: the decay
+        # mask must judge canonical rank, not (W, ...)-stacked rank —
+        # otherwise norm/bias vectors get decayed (and the fused tail,
+        # which sees canonical leaves under vmap, would disagree).
         delta, opt = self.local_optimizer(g_t, state.opt, state.params,
-                                          sched)
+                                          sched, axis0_is_worker=True)
 
         # --- w_i = w_i + D_i + Δw_i  (Eq. 12: move toward the average +
         # corrected update in one pass)
@@ -212,13 +260,23 @@ class DCS3GD:
             "delta_norm": _mean_worker_norm(delta),
             **pol_metrics,
         }
-        return TrainState(new_params, opt, self._comm(delta, sdt, pstate),
+        return TrainState(new_params, opt,
+                          self._comm(delta, sdt, pstate, plan=plan),
                           state.step + 1), metrics
 
-    def _comm(self, delta: PyTree, sdt, pstate: Optional[PyTree] = None
-              ) -> PyTree:
-        comm = {} if self._reduces_weights else {
-            "delta_prev": jax.tree.map(lambda d: d.astype(sdt), delta)}
+    def _comm(self, delta: PyTree, sdt, pstate: Optional[PyTree] = None, *,
+              plan=None, packed: bool = False) -> PyTree:
+        """Next step's wire state; with a plan the carried deltas are the
+        flat buckets themselves (``packed=True`` when ``delta`` already
+        is the bucket list, e.g. from the fused bucketed tail)."""
+        if self._reduces_weights:
+            comm = {}
+        elif plan is not None:
+            db = delta if packed else plan.pack(delta)
+            comm = {"delta_prev": [b.astype(sdt) for b in db]}
+        else:
+            comm = {"delta_prev": jax.tree.map(lambda d: d.astype(sdt),
+                                               delta)}
         if pstate is not None:
             comm["staleness"] = pstate
         return comm
@@ -238,6 +296,11 @@ class DCS3GD:
         overrides = {}
         if "staleness" in state.comm:
             overrides["staleness"] = self.staleness.state_specs(axes)
+        if self.buckets and "delta_prev" in state.comm:
+            # bucketed comm state: (W, bucket) buffers — worker axes on the
+            # leading dim, the contiguous flat dim never split mid-leaf
+            overrides["delta_prev"] = self._plan(state.params).specs(
+                axes.worker_spec)
         return shd.train_state_specs(
             model_cfg, state, model_size=axes.model_size,
             worker_axes=axes.worker_spec, comm_overrides=overrides)
@@ -272,7 +335,7 @@ class DCS3GD:
     # -- fused Pallas tail --------------------------------------------------
 
     def _fused_tail(self, state: TrainState, grads, D, loss, lr, wd, *,
-                    pstate: Optional[PyTree] = None,
+                    plan=None, pstate: Optional[PyTree] = None,
                     pol_metrics: Optional[Metrics] = None
                     ) -> Tuple[TrainState, Metrics]:
         cfg = self.cfg
@@ -283,6 +346,40 @@ class DCS3GD:
         from repro.kernels import ops as kops
         lambda0 = self.compensator.lambda0
         mu = self.local_optimizer.momentum
+        sdt = jnp.dtype(cfg.state_dtype)
+
+        if plan is not None:
+            # single-launch tail: ONE row-grid kernel per bucket (vs one
+            # per leaf), no per-leaf pad/unpad; D is already bucketed and
+            # the produced delta stays bucketed for the wire.
+            g_b = plan.pack(grads)
+            m_b = plan.pack(state.opt["m"])
+            w_b = plan.pack(state.params)
+
+            def per_worker_b(g_i, d_i, m_i, w_i):
+                gsq, csq = kops.dc_norms_buckets(g_i, d_i)
+                lam_i = kops.dc_lambda(gsq, csq, lambda0)
+                w_n, m_n, dw = kops.dc_fused_update_buckets(
+                    g_i, d_i, m_i, w_i, lam=lam_i, mu=mu, eta=lr, wd=wd,
+                    decay=plan.bucket_decay)
+                return w_n, m_n, dw, lam_i
+
+            w_nb, m_nb, delta_b, lam = jax.vmap(per_worker_b)(
+                g_b, D, m_b, w_b)
+            new_params = plan.unpack(w_nb)
+            opt = jax.tree.map(lambda x: x.astype(sdt),
+                               {"m": plan.unpack(m_nb)})
+            metrics = {
+                "loss": jnp.mean(loss), "lr": lr, "wd": wd,
+                "lambda": jnp.mean(lam),
+                "distance_norm": _mean_worker_norm(D),
+                "delta_norm": _mean_worker_norm(delta_b),
+                **(pol_metrics or {}),
+            }
+            return TrainState(new_params, opt,
+                              self._comm(delta_b, sdt, pstate, plan=plan,
+                                         packed=True),
+                              state.step + 1), metrics
 
         def per_worker(g_i, d_i, m_i, w_i):
             gsq, csq = kops.dc_norms_tree(g_i, d_i)
@@ -293,7 +390,6 @@ class DCS3GD:
 
         new_params, m_new, delta_f32, lam = jax.vmap(per_worker)(
             grads, D, state.opt["m"], state.params)
-        sdt = jnp.dtype(cfg.state_dtype)
         metrics = {
             "loss": jnp.mean(loss), "lr": lr, "wd": wd,
             "lambda": jnp.mean(lam),

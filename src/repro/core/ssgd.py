@@ -12,7 +12,7 @@ still shards the leading batch axis over the worker mesh axes.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,8 @@ class SSGD:
     name = "ssgd"
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
-                 local_optimizer=None, reducer=None, **_ignored):
+                 local_optimizer=None, reducer=None,
+                 buckets: Optional[int] = None, **_ignored):
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -49,6 +50,15 @@ class SSGD:
             else registry.make_local_optimizer(local_optimizer, cfg))
         self.reducer = registry.make_reducer(
             "mean_allreduce" if reducer is None else reducer, cfg)
+        # flat-buffer bucketing for the gradient all-reduce (the blocking
+        # wire): >0 packs grads into contiguous buckets so the reducer
+        # casts/means once per bucket, not per leaf; 0 = legacy per-leaf
+        self.buckets = int(cfg.buckets if buckets is None else buckets)
+        self._plan_cache: dict = {}
+
+    def _plan(self, params: PyTree):
+        from repro.parallel import buckets as B
+        return B.cached_plan(self._plan_cache, params, self.buckets)
 
     def init(self, params: PyTree) -> TrainState:
         return TrainState(params=params,
@@ -65,9 +75,16 @@ class SSGD:
         # collapse_worker_axis folds the reducer's broadcastable output
         # ((1, ...) for the mean, (W, ...) for gossip) back to canonical
         # shapes; for the mean reducer this is bitwise the seed behaviour.
-        grads = collapse_worker_axis(
-            self.reducer(jax.tree.map(lambda g: g.astype(jnp.float32),
-                                      grads)))
+        # With bucketing the wire sees a few contiguous (W, bucket)
+        # buffers — one cast+reduce per bucket — and the pack/unpack is a
+        # bitwise reshape, so the trajectory is unchanged.
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.buckets:
+            plan = self._plan(state.params)
+            grads = plan.unpack(collapse_worker_axis(
+                self.reducer(plan.pack(g32))))
+        else:
+            grads = collapse_worker_axis(self.reducer(g32))
         delta, opt = self.local_optimizer(grads, state.opt, state.params,
                                           {"lr": lr, "weight_decay": wd})
         new_params = jax.tree.map(

@@ -252,6 +252,13 @@ class DCS3GDConfig:
     ssp_threshold: int = 4
     # communication precision for the delta all-reduce (beyond-paper knob)
     comm_dtype: str = "float32"
+    # 'hierarchical' reducer: number of worker groups (= pods) whose means
+    # gossip over the slow wire; must divide n_workers (Layered SGD)
+    hier_groups: int = 2
+    # flat-buffer comm bucketing: target number of contiguous BLOCK-aligned
+    # buckets the param tree packs into for the wire + the fused Pallas
+    # tail (repro.parallel.buckets); 0 = legacy per-leaf paths
+    buckets: int = 0
     # storage dtype for the per-worker optimizer slots (momentum) and
     # delta_prev (beyond-paper knob; math stays f32, storage narrows —
     # granite-20b's DC state is 15 GB/device at f32, over v5e HBM)

@@ -103,16 +103,25 @@ def _dc_update_kernel(scalars_ref, g_ref, d_ref, m_ref, w_ref,
     delta_ref[...] = delta
 
 
-def dc_fused_update(g2d, d2d, m2d, w2d, *, lam, mu, eta, wd,
-                    interpret: bool = False):
-    """All inputs (M, 128), M % ROWS == 0.  lam/eta/wd may be traced scalars.
-    Returns (w', m', Δw) with w' in w2d.dtype, m'/Δw f32."""
-    m_rows = g2d.shape[0]
-    grid = (m_rows // ROWS,)
-    scalars = jnp.stack([
+def pack_scalars(lam, mu, eta, wd) -> jnp.ndarray:
+    """The (1, 4) scalar operand of the fused update.  Callers looping
+    over many buffers (ops.py trees/buckets) build the decayed and
+    undecayed rows ONCE instead of re-stacking four scalars per leaf."""
+    return jnp.stack([
         jnp.asarray(lam, jnp.float32), jnp.asarray(mu, jnp.float32),
         jnp.asarray(eta, jnp.float32), jnp.asarray(wd, jnp.float32)
     ]).reshape(1, 4)
+
+
+def dc_fused_update(g2d, d2d, m2d, w2d, *, lam=None, mu=None, eta=None,
+                    wd=None, scalars=None, interpret: bool = False):
+    """All inputs (M, 128), M % ROWS == 0.  lam/eta/wd may be traced scalars,
+    or pre-packed via ``scalars=pack_scalars(...)``.
+    Returns (w', m', Δw) with w' in w2d.dtype, m'/Δw f32."""
+    m_rows = g2d.shape[0]
+    grid = (m_rows // ROWS,)
+    if scalars is None:
+        scalars = pack_scalars(lam, mu, eta, wd)
     block = pl.BlockSpec((ROWS, LANES), lambda i: (i, 0))
     return pl.pallas_call(
         _dc_update_kernel,

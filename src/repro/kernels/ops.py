@@ -1,10 +1,16 @@
-"""jit'd pytree-level wrappers around the Pallas kernels.
+"""jit'd pytree- and bucket-level wrappers around the Pallas kernels.
 
 `DCS3GD._fused_tail` (``use_kernels=True``) plugs these into the core
-algorithm: per-leaf flatten -> pad to (ROWS x 128) tiles -> kernel ->
-unpad/reshape.  On CPU the kernels run with ``interpret=True``
-(Python-level execution of the kernel body); on TPU the same code
-compiles to Mosaic.
+algorithm.  Two shapes of the same tail:
+
+* per-leaf (legacy, ``buckets=0``): flatten -> pad to (ROWS x 128)
+  tiles -> kernel -> unpad/reshape, one launch per leaf;
+* bucketed (``dc_norms_buckets`` / ``dc_fused_update_buckets``): the
+  `repro.parallel.buckets.BucketPlan` buffers are already BLOCK-aligned,
+  so each bucket is ONE row-grid launch with no pad/unpad at all.
+
+On CPU the kernels run with ``interpret=True`` (Python-level execution
+of the kernel body); on TPU the same code compiles to Mosaic.
 """
 from __future__ import annotations
 
@@ -63,21 +69,81 @@ def dc_fused_update_tree(grads: PyTree, distance: PyTree, momentum: PyTree,
     leaves_d = jax.tree.leaves(distance)
     leaves_m = jax.tree.leaves(momentum)
     leaves_w = jax.tree.leaves(params)
+    # one (1, 4) scalar operand per decay class for the WHOLE tree — not a
+    # fresh zeros_like + 4-scalar stack per leaf
+    sc_decay = K.pack_scalars(lam, mu, eta, wd)
+    sc_plain = K.pack_scalars(lam, mu, eta, 0.0)
     out_w, out_m, out_delta = [], [], []
     for g, d, m, w in zip(leaves_g, leaves_d, leaves_m, leaves_w):
         g2, n = _to_tiles(g.astype(jnp.float32))
         d2, _ = _to_tiles(d.astype(jnp.float32))
         m2, _ = _to_tiles(m.astype(jnp.float32))
         w2, _ = _to_tiles(w)
-        wd_leaf = wd if w.ndim > 1 else jnp.zeros_like(jnp.asarray(wd))
-        wn, mn, dn = K.dc_fused_update(g2, d2, m2, w2, lam=lam, mu=mu,
-                                       eta=eta, wd=wd_leaf,
-                                       interpret=interpret)
+        wn, mn, dn = K.dc_fused_update(
+            g2, d2, m2, w2, scalars=sc_decay if w.ndim > 1 else sc_plain,
+            interpret=interpret)
         out_w.append(_from_tiles(wn, n, w.shape, w.dtype))
         out_m.append(_from_tiles(mn, n, m.shape, jnp.float32))
         out_delta.append(_from_tiles(dn, n, g.shape, jnp.float32))
     un = functools.partial(jax.tree_util.tree_unflatten, treedef)
     return un(out_w), un(out_m), un(out_delta)
+
+
+# ---------------------------------------------------------------------------
+# bucketed entry points — one launch per contiguous bucket, no per-leaf pad
+# ---------------------------------------------------------------------------
+
+
+def _bucket_tiles(b: jnp.ndarray) -> jnp.ndarray:
+    """A flat `BucketPlan` bucket is BLOCK-aligned by construction: reshape
+    straight to the (rows, 128) kernel layout — the pad -> kernel -> unpad
+    round-trip of the per-leaf path disappears."""
+    assert b.shape[-1] % K.BLOCK == 0, b.shape
+    return b.reshape(-1, K.LANES)
+
+
+def dc_norms_buckets(g_buckets, d_buckets, *, interpret=None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Eq. 17 norms over flat buckets: one kernel launch per bucket
+    (a row grid over the whole buffer) instead of one per leaf.  Bucket
+    padding is zeros and contributes nothing to either sum."""
+    interpret = _is_cpu() if interpret is None else interpret
+    gsq = jnp.zeros((), jnp.float32)
+    csq = jnp.zeros((), jnp.float32)
+    for g, d in zip(g_buckets, d_buckets):
+        a, b = K.dc_norms(_bucket_tiles(g.astype(jnp.float32)),
+                          _bucket_tiles(d.astype(jnp.float32)),
+                          interpret=interpret)
+        gsq = gsq + a
+        csq = csq + b
+    return gsq, csq
+
+
+def dc_fused_update_buckets(g_buckets, d_buckets, m_buckets, w_buckets, *,
+                            lam, mu, eta, wd, decay, interpret=None):
+    """Fused correction+momentum+Eq.12 over flat buckets.
+
+    ``decay`` is the plan's per-bucket weight-decay mask
+    (`BucketPlan.bucket_decay`): buckets are decay-homogeneous, so the
+    scalar operand is picked once per bucket — never re-tiled per leaf.
+    Returns (w', m', Δw) bucket lists: w' in each w bucket's dtype,
+    m'/Δw f32."""
+    interpret = _is_cpu() if interpret is None else interpret
+    sc_decay = K.pack_scalars(lam, mu, eta, wd)
+    sc_plain = K.pack_scalars(lam, mu, eta, 0.0)
+    out_w, out_m, out_delta = [], [], []
+    for g, d, m, w, dec in zip(g_buckets, d_buckets, m_buckets, w_buckets,
+                               decay):
+        wn, mn, dn = K.dc_fused_update(
+            _bucket_tiles(g.astype(jnp.float32)),
+            _bucket_tiles(d.astype(jnp.float32)),
+            _bucket_tiles(m.astype(jnp.float32)),
+            _bucket_tiles(w),
+            scalars=sc_decay if dec else sc_plain, interpret=interpret)
+        out_w.append(wn.reshape(w.shape).astype(w.dtype))
+        out_m.append(mn.reshape(m.shape))
+        out_delta.append(dn.reshape(g.shape))
+    return out_w, out_m, out_delta
 
 
 def dc_lambda(gsq: jnp.ndarray, csq: jnp.ndarray, lambda0: float

@@ -44,7 +44,7 @@ PyTree = Any
 
 # checkpoint metadata keys describing the algorithm that produced a state
 CKPT_ALGO_KEYS = ("algo", "reducer", "local_optimizer", "n_workers",
-                  "staleness", "ssp_threshold")
+                  "staleness", "ssp_threshold", "buckets")
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +164,14 @@ class Engine:
     def fit(self, state: PyTree, batch_fn: Callable[[int], PyTree], *,
             steps: int, start: int = 0, log_every: int = 10,
             verbose: bool = True) -> Tuple[PyTree, list, float]:
-        """Run the step loop; returns (state, metric history, wall s)."""
+        """Run the step loop; returns (state, metric history, wall s).
+
+        The loop stays on jax's async dispatch queue: non-logging
+        iterations never touch the device-resident ``metrics`` (no
+        ``float``/``block_until_ready`` — a per-step host sync would
+        serialize dispatch against compute and hide nothing).  On
+        ``log_every`` boundaries the whole metrics dict is fetched with
+        ONE ``jax.device_get`` (which blocks on just that step)."""
         first = batch_fn(start) if steps > start else None
         step_fn = self.jit_train_step(state, first)
         history = []
@@ -173,7 +180,8 @@ class Engine:
             batch = first if it == start else batch_fn(it)
             state, metrics = step_fn(state, batch)
             if it % log_every == 0 or it == steps - 1:
-                m = {k: float(v) for k, v in metrics.items()}
+                m = {k: float(v)
+                     for k, v in jax.device_get(metrics).items()}
                 m["step"] = it
                 m["wall_s"] = round(time.time() - t0, 1)
                 history.append(m)
@@ -203,6 +211,10 @@ class Engine:
             # whatever the flag defaults to
             "ssp_threshold": getattr(
                 getattr(alg, "staleness", None), "threshold", None),
+            # bucketing changes the comm-state STRUCTURE (flat buffers vs
+            # the per-leaf tree): restore sites must rebuild with the same
+            # plan or the template won't match the checkpoint
+            "buckets": getattr(alg, "buckets", None),
         }
 
     def save(self, path, state: PyTree, *, step: Optional[int] = None):
@@ -273,6 +285,7 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                              reducer: str = "mean_allreduce",
                              staleness: str = "fixed",
                              ssp_threshold: int = 4,
+                             buckets: int = 0,
                              dc_cfg: Optional[DCS3GDConfig] = None
                              ) -> Tuple[Any, dict]:
     """Build the `DistributedOptimizer` matching a training checkpoint.
@@ -287,7 +300,8 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
     meta = checkpoint_meta(path)
     resolved = {"algo": algo, "n_workers": n_workers,
                 "local_optimizer": local_optimizer, "reducer": reducer,
-                "staleness": staleness, "ssp_threshold": ssp_threshold}
+                "staleness": staleness, "ssp_threshold": ssp_threshold,
+                "buckets": buckets}
     for k in CKPT_ALGO_KEYS:
         if meta.get(k) is not None:
             resolved[k] = meta[k]
@@ -298,5 +312,6 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                         n_workers=int(resolved["n_workers"]),
                         local_optimizer=resolved["local_optimizer"],
                         reducer=resolved["reducer"],
-                        staleness=resolved["staleness"])
+                        staleness=resolved["staleness"],
+                        buckets=int(resolved["buckets"] or 0))
     return alg, resolved

@@ -68,6 +68,10 @@ def build_argparser():
     ap.add_argument("--metrics-out", type=Path, default=None)
     ap.add_argument("--use-kernels", action="store_true",
                     help="use the fused Pallas update path")
+    ap.add_argument("--buckets", type=int, default=0,
+                    help="pack comm state into this many contiguous "
+                         "flat buckets (repro.parallel.buckets); 0 = "
+                         "legacy per-leaf reduce/update")
     return ap
 
 
@@ -85,6 +89,7 @@ def _adopt_resume_meta(args) -> None:
     args.ssp_threshold = int(adopted.get("ssp_threshold",
                                          args.ssp_threshold))
     args.workers = int(adopted.get("n_workers", args.workers))
+    args.buckets = int(adopted.get("buckets", args.buckets) or 0)
     print(f"[train] resume metadata: {adopted}")
 
 
@@ -112,7 +117,7 @@ def run(args) -> dict:
     n_params = sum(x.size for x in jax.tree.leaves(params))
     alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
                         reducer=args.reducer, staleness=args.staleness,
-                        use_kernels=args.use_kernels)
+                        use_kernels=args.use_kernels, buckets=args.buckets)
     engine = Engine(model, alg)
     state = alg.init(params)
 

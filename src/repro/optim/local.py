@@ -33,8 +33,16 @@ from repro.core.api import Schedules
 PyTree = Any
 
 
-def _decay_mask(params: PyTree) -> PyTree:
-    return jax.tree.map(lambda p: jnp.asarray(p.ndim > 1, jnp.float32), params)
+def _decay_mask(params: PyTree, axis0_is_worker: bool = False) -> PyTree:
+    """1.0 on leaves that get weight decay (canonical rank > 1).
+
+    ``axis0_is_worker``: the tree carries a leading worker axis (DC-S3GD
+    worker-stacked state) — rank must be judged on the canonical shape,
+    otherwise every norm/bias vector looks like a matrix and gets decayed
+    (the paper masks those out)."""
+    rank0 = 2 if axis0_is_worker else 1
+    return jax.tree.map(lambda p: jnp.asarray(p.ndim > rank0, jnp.float32),
+                        params)
 
 
 def init_local_state(params: PyTree, optimizer: str = "momentum") -> PyTree:
@@ -46,11 +54,11 @@ def init_local_state(params: PyTree, optimizer: str = "momentum") -> PyTree:
 
 
 def momentum_update(grads: PyTree, state: PyTree, params: PyTree, *,
-                    lr, momentum: float, weight_decay, nesterov: bool = False
-                    ) -> Tuple[PyTree, PyTree]:
+                    lr, momentum: float, weight_decay, nesterov: bool = False,
+                    axis0_is_worker: bool = False) -> Tuple[PyTree, PyTree]:
     """Returns (delta_w, new_state).  ``lr``/``weight_decay`` may be traced
     scalars (the paper schedules both)."""
-    mask = _decay_mask(params)
+    mask = _decay_mask(params, axis0_is_worker)
 
     def upd(g, m, p, msk):
         g32 = g.astype(jnp.float32) + weight_decay * msk * p.astype(jnp.float32)
@@ -68,9 +76,9 @@ def momentum_update(grads: PyTree, state: PyTree, params: PyTree, *,
 
 def lars_update(grads: PyTree, state: PyTree, params: PyTree, *,
                 lr, momentum: float, weight_decay, trust: float = 0.001,
-                **_) -> Tuple[PyTree, PyTree]:
+                axis0_is_worker: bool = False, **_) -> Tuple[PyTree, PyTree]:
     """LARS (You et al. 2017) — paper §V suggested local optimizer."""
-    mask = _decay_mask(params)
+    mask = _decay_mask(params, axis0_is_worker)
 
     def upd(g, m, p, msk):
         g32 = g.astype(jnp.float32) + weight_decay * msk * p.astype(jnp.float32)
@@ -91,9 +99,10 @@ def lars_update(grads: PyTree, state: PyTree, params: PyTree, *,
 
 def adam_update(grads: PyTree, state: PyTree, params: PyTree, *,
                 lr, weight_decay, b1: float = 0.9, b2: float = 0.999,
-                eps: float = 1e-8, **_) -> Tuple[PyTree, PyTree]:
+                eps: float = 1e-8, axis0_is_worker: bool = False,
+                **_) -> Tuple[PyTree, PyTree]:
     """AdamW-style local optimizer — paper §V suggested alternative."""
-    mask = _decay_mask(params)
+    mask = _decay_mask(params, axis0_is_worker)
     t = state["t"] + 1
     bc1 = 1.0 - b1 ** t.astype(jnp.float32)
     bc2 = 1.0 - b2 ** t.astype(jnp.float32)
@@ -141,11 +150,13 @@ class Momentum:
         return init_local_state(params, "momentum")
 
     def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
-                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+                 schedules: Schedules, *, axis0_is_worker: bool = False
+                 ) -> Tuple[PyTree, PyTree]:
         return momentum_update(grads, slots, params, lr=schedules["lr"],
                                momentum=self.momentum,
                                weight_decay=schedules["weight_decay"],
-                               nesterov=self.nesterov)
+                               nesterov=self.nesterov,
+                               axis0_is_worker=axis0_is_worker)
 
 
 @registry.register(registry.LOCAL_OPTIMIZER, "nesterov")
@@ -174,11 +185,12 @@ class LARS:
         return init_local_state(params, "momentum")
 
     def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
-                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+                 schedules: Schedules, *, axis0_is_worker: bool = False
+                 ) -> Tuple[PyTree, PyTree]:
         return lars_update(grads, slots, params, lr=schedules["lr"],
                            momentum=self.momentum,
                            weight_decay=schedules["weight_decay"],
-                           trust=self.trust)
+                           trust=self.trust, axis0_is_worker=axis0_is_worker)
 
 
 @registry.register(registry.LOCAL_OPTIMIZER, "adam")
@@ -195,10 +207,12 @@ class Adam:
         return init_local_state(params, "adam")
 
     def __call__(self, grads: PyTree, slots: PyTree, params: PyTree,
-                 schedules: Schedules) -> Tuple[PyTree, PyTree]:
+                 schedules: Schedules, *, axis0_is_worker: bool = False
+                 ) -> Tuple[PyTree, PyTree]:
         return adam_update(grads, slots, params, lr=schedules["lr"],
                            weight_decay=schedules["weight_decay"],
-                           b1=self.b1, b2=self.b2, eps=self.eps)
+                           b1=self.b1, b2=self.b2, eps=self.eps,
+                           axis0_is_worker=axis0_is_worker)
 
 
 def from_config(cfg) -> Any:

@@ -1,5 +1,6 @@
+from repro.parallel.buckets import BucketPlan, plan_buckets
 from repro.parallel.sharding import (batch_specs, cache_specs, opt_specs,
                                      param_specs, train_state_specs)
 
-__all__ = ["batch_specs", "cache_specs", "opt_specs", "param_specs",
-           "train_state_specs"]
+__all__ = ["BucketPlan", "batch_specs", "cache_specs", "opt_specs",
+           "param_specs", "plan_buckets", "train_state_specs"]

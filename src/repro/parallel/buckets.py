@@ -1,0 +1,221 @@
+"""Flat-buffer bucketing of parameter pytrees (PyTorch-DDP-style).
+
+The hot path of every algorithm iterates leaf-by-leaf over the parameter
+pytree: O(#leaves) casts/means on the wire per reduce, O(#leaves)
+pad -> kernel -> unpad round-trips in the fused Pallas tail.  A
+`BucketPlan` is built ONCE per model from the (abstract) param tree and
+packs the leaves into a small number of contiguous, `K.BLOCK`-aligned
+flat buckets:
+
+* leaves are grouped by ``(dtype, weight-decay class)`` — a bucket is
+  dtype-homogeneous (so pack/unpack is a bitwise reshape, never a cast)
+  and decay-homogeneous (so the fused kernel applies ONE wd scalar per
+  bucket instead of re-tiling it per leaf);
+* inside a group, leaves fill buckets up to ``ceil(total/n_buckets)``
+  elements, in tree-flatten order; each bucket's total is padded up to a
+  multiple of ``K.BLOCK`` (= ROWS x LANES) so the Pallas tail launches
+  one kernel per bucket with a plain row grid — no per-leaf padding;
+* the zero padding is inert end to end: it contributes nothing to the
+  Eq. 17 norms, and the fused update maps pad zeros to pad zeros
+  (g=0, w=0, m=0 stays 0 under correction+momentum+decay), so carried
+  bucketed state never leaks padding into real elements.
+
+``pack``/``unpack`` are jit-safe (all offsets static) and accept leaves
+with an optional extra *leading* axis relative to the plan — the DC
+worker axis ``W`` (or the ``(1, ...)`` output of a keepdims mean): a
+plan built from canonical per-worker shapes packs a ``(W, ...)`` tree
+into ``(W, bucket)`` buffers with the worker axis preserved, which is
+exactly what the reducers want on the wire.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import dc_update as K
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside the flat buckets."""
+
+    bucket: int          # bucket index
+    offset: int          # element offset inside the bucket (static)
+    size: int            # prod(shape) elements
+    shape: Tuple[int, ...]
+    dtype: Any           # canonical leaf dtype (jnp.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static packing layout: leaf slots + per-bucket size/dtype/decay.
+
+    ``bucket_sizes`` are padded element counts, each a multiple of
+    ``block``; ``bucket_decay[b]`` is True when the bucket holds rank>1
+    leaves (the class weight decay applies to)."""
+
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    bucket_sizes: Tuple[int, ...]
+    bucket_dtypes: Tuple[Any, ...]
+    bucket_decay: Tuple[bool, ...]
+    block: int
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    # -- packing ------------------------------------------------------------
+
+    def _lead(self, tree_leaves: Sequence[jnp.ndarray]) -> Tuple[int, ...]:
+        """The extra leading axes of ``tree_leaves`` relative to the plan
+        (() for canonical leaves, (W,) for worker-stacked trees)."""
+        lead = tree_leaves[0].shape[: tree_leaves[0].ndim
+                                    - len(self.slots[0].shape)]
+        for leaf, slot in zip(tree_leaves, self.slots):
+            assert leaf.shape == lead + slot.shape, \
+                (leaf.shape, lead, slot.shape)
+        return lead
+
+    def pack(self, tree: PyTree) -> List[jnp.ndarray]:
+        """Tree -> list of flat buckets, one concatenate per bucket.
+
+        Leaves may carry extra leading axes (the worker axis); buckets
+        come out ``lead + (bucket_size,)``.  Bitwise: leaves must already
+        share their bucket's dtype (buckets are dtype-homogeneous by
+        construction, so a uniform-dtype tree — grads, deltas — or the
+        param tree itself both qualify); no cast ever happens here."""
+        leaves = jax.tree.leaves(tree)
+        assert len(leaves) == len(self.slots), \
+            (len(leaves), len(self.slots))
+        lead = self._lead(leaves)
+        per_bucket: List[List[jnp.ndarray]] = [[] for _ in self.bucket_sizes]
+        fill: List[int] = [0] * self.n_buckets
+        for leaf, slot in zip(leaves, self.slots):
+            flat = leaf.reshape(lead + (slot.size,))
+            bucket = per_bucket[slot.bucket]
+            if bucket:
+                assert flat.dtype == bucket[0].dtype, \
+                    (flat.dtype, bucket[0].dtype)
+            bucket.append(flat)
+            fill[slot.bucket] += slot.size
+        out = []
+        for b, parts in enumerate(per_bucket):
+            pad = self.bucket_sizes[b] - fill[b]
+            if pad:
+                parts = parts + [jnp.zeros(lead + (pad,), parts[0].dtype)]
+            out.append(parts[0] if len(parts) == 1 and pad == 0
+                       else jnp.concatenate(parts, axis=-1))
+        return out
+
+    def unpack(self, buckets: Sequence[jnp.ndarray]) -> PyTree:
+        """List of flat buckets -> tree with the plan's shapes.
+
+        Inverse of :meth:`pack` up to the (dropped) padding; static
+        slices, so bitwise.  Leading axes of the buckets are preserved on
+        every leaf; dtype follows the bucket (pack never casts, so a
+        round trip returns the input dtypes)."""
+        assert len(buckets) == self.n_buckets, \
+            (len(buckets), self.n_buckets)
+        lead = buckets[0].shape[:-1]
+        leaves = []
+        for slot in self.slots:
+            flat = buckets[slot.bucket][..., slot.offset:
+                                        slot.offset + slot.size]
+            leaves.append(flat.reshape(lead + slot.shape))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    # -- derived layouts ----------------------------------------------------
+
+    def zeros(self, dtype, lead: Tuple[int, ...] = ()) -> List[jnp.ndarray]:
+        """Zero-initialized buckets (e.g. the carried ``delta_prev``)."""
+        return [jnp.zeros(lead + (n,), dtype) for n in self.bucket_sizes]
+
+    def specs(self, worker_spec=None) -> List[P]:
+        """PartitionSpecs for worker-stacked buckets: the worker axes on
+        the leading dim, the flat dim replicated (contiguous buffers
+        never split mid-leaf)."""
+        if worker_spec is None:
+            return [P(None) for _ in self.bucket_sizes]
+        return [P(worker_spec, None) for _ in self.bucket_sizes]
+
+
+def cached_plan(cache: dict, tree: PyTree, n_buckets: int, *,
+                strip_leading_axis: bool = False) -> BucketPlan:
+    """Memoized `plan_buckets` keyed on the tree's (shape, dtype) layout —
+    the per-algorithm plan cache (DCS3GD/SSGD carry one ``cache`` dict
+    each; a step retrace with the same model reuses the plan)."""
+    key = (tuple((tuple(x.shape), jnp.dtype(x.dtype).name)
+                 for x in jax.tree.leaves(tree)),
+           n_buckets, strip_leading_axis)
+    if key not in cache:
+        cache[key] = plan_buckets(tree, n_buckets,
+                                  strip_leading_axis=strip_leading_axis)
+    return cache[key]
+
+
+def plan_buckets(tree: PyTree, n_buckets: int, *,
+                 block: Optional[int] = None,
+                 strip_leading_axis: bool = False) -> BucketPlan:
+    """Build the static packing layout for ``tree`` (abstract leaves ok).
+
+    ``n_buckets`` is a *target*: leaves are grouped by (dtype, decay
+    class) first — a group never shares a bucket — then split so no
+    bucket exceeds ``ceil(total_elements / n_buckets)`` (single oversized
+    leaves get their own bucket).  ``strip_leading_axis`` builds the plan
+    from ``shape[1:]`` of every leaf — convenient when only the
+    worker-stacked ``(W, ...)`` tree is at hand."""
+    assert n_buckets > 0, "use the legacy per-leaf path for buckets=0"
+    block = K.BLOCK if block is None else block
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [tuple(x.shape[1:] if strip_leading_axis else x.shape)
+              for x in leaves]
+    def _numel(shape: Tuple[int, ...]) -> int:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        return n
+
+    total = sum(_numel(s) for s in shapes)
+    cap = max(-(-total // n_buckets), 1)
+
+    # stable grouping: first-seen order of (dtype, decay) keys
+    group_of = {}
+    order = []
+    for i, leaf in enumerate(leaves):
+        key = (jnp.dtype(leaf.dtype), len(shapes[i]) > 1)
+        if key not in group_of:
+            group_of[key] = len(order)
+            order.append(key)
+
+    slots: List[Optional[LeafSlot]] = [None] * len(leaves)
+    sizes: List[int] = []
+    dtypes: List[Any] = []
+    decay: List[bool] = []
+    for key in order:
+        dt, dec = key
+        cur = -1          # current bucket for this group
+        fill = 0
+        for i, leaf in enumerate(leaves):
+            if (jnp.dtype(leaf.dtype), len(shapes[i]) > 1) != key:
+                continue
+            size = _numel(shapes[i])
+            if cur < 0 or (fill and fill + size > cap):
+                sizes.append(0)
+                dtypes.append(dt)
+                decay.append(dec)
+                cur, fill = len(sizes) - 1, 0
+            slots[i] = LeafSlot(bucket=cur, offset=fill, size=size,
+                                shape=shapes[i], dtype=dt)
+            fill += size
+            sizes[cur] = fill
+    padded = [-(-n // block) * block for n in sizes]
+    return BucketPlan(treedef=treedef, slots=tuple(slots),
+                      bucket_sizes=tuple(padded), bucket_dtypes=tuple(dtypes),
+                      bucket_decay=tuple(decay), block=block)

@@ -58,8 +58,12 @@ def _seed_dc_s3gd_step(params, opt, delta_prev, step, batch, *, loss_fn, cfg):
     g_t, lam = dc_correct(grads, D, cfg.lambda0, mode=cfg.lambda_norm,
                           axis0_is_worker=True)
     upd = local_update(cfg.local_optimizer)
+    # axis0_is_worker: the worker-aware decay mask (rank judged on
+    # canonical shapes) applies on both sides of the parity check — the
+    # seed's (W, ...)-rank masking was a bug, fixed in optim.local
     delta, opt = upd(g_t, opt, params, lr=lr, momentum=cfg.momentum,
-                     weight_decay=wd, nesterov=cfg.nesterov)
+                     weight_decay=wd, nesterov=cfg.nesterov,
+                     axis0_is_worker=True)
     new_params = jax.tree.map(
         lambda w, d_i, dw: (w.astype(jnp.float32) + d_i
                             + dw.astype(jnp.float32)).astype(w.dtype),

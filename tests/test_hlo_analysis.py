@@ -69,3 +69,91 @@ def test_gather_traffic_not_full_table():
     c = _compile(lambda t, i: jnp.take(t, i, axis=0), table, ids)
     st = analyze_hlo(c.as_text())
     assert st.traffic_bytes < 50_000 * 64 * 4 * 0.5, st.traffic_bytes
+
+
+# ---------------------------------------------------------------------------
+# bucketed comm: wire op counts scale with #buckets, not #leaves
+# ---------------------------------------------------------------------------
+
+
+def _lowered_op_counts(fn, *args):
+    txt = jax.jit(fn).lower(*args).as_text()
+    return txt.count("stablehlo.reduce"), txt.count("stablehlo.convert")
+
+
+def _many_leaf_tree(n_leaves=12, W=4):
+    return {f"w{i}": jnp.ones((W, 16, 16), jnp.float32)
+            for i in range(n_leaves)}
+
+
+def test_bucketed_mean_allreduce_reduces_scale_with_buckets():
+    """Per-leaf mean_allreduce lowers one reduce + one wire cast per
+    LEAF; through a BucketPlan it is one per BUCKET."""
+    from repro.core.reduce import MeanAllReduce
+    from repro.parallel.buckets import plan_buckets
+
+    n_leaves, n_buckets = 12, 3
+    tree = _many_leaf_tree(n_leaves)
+    plan = plan_buckets(tree, n_buckets, strip_leading_axis=True)
+    assert plan.n_buckets == n_buckets
+    red = MeanAllReduce(comm_dtype="bfloat16")
+
+    r_leaf, c_leaf = _lowered_op_counts(red, tree)
+    r_bucket, c_bucket = _lowered_op_counts(
+        lambda t: red(plan.pack(t)), tree)
+    assert r_leaf == n_leaves
+    assert r_bucket == n_buckets
+    # wire casts are a fixed handful per buffer: same constant, scaled by
+    # the buffer count
+    assert c_leaf % n_leaves == 0
+    assert c_bucket == (c_leaf // n_leaves) * n_buckets
+
+
+def test_bucketed_gossip_rolls_scale_with_buckets():
+    """Gossip's 2k neighbor exchanges happen per bucket, not per leaf
+    (collective-permutes on a mesh; rolls + wire casts here)."""
+    from repro.core.reduce import GossipReduce
+    from repro.parallel.buckets import plan_buckets
+
+    n_leaves, n_buckets = 12, 3
+    tree = _many_leaf_tree(n_leaves)
+    plan = plan_buckets(tree, n_buckets, strip_leading_axis=True)
+    red = GossipReduce(comm_dtype="bfloat16", neighbors=1)
+
+    _, c_leaf = _lowered_op_counts(red, tree)
+    _, c_bucket = _lowered_op_counts(lambda t: red(plan.pack(t)), tree)
+    # down-cast to the wire once + up-cast per neighbor term (2k): 3 per
+    # buffer at k=1, whether buffers are leaves or buckets
+    assert c_leaf == 3 * n_leaves
+    assert c_bucket == 3 * n_buckets
+
+
+def test_bucketed_dc_s3gd_step_has_fewer_wire_ops():
+    """End to end: the jitted bucketed dc_s3gd step lowers strictly fewer
+    reduce + convert ops than the per-leaf step on a many-leaf model."""
+    from repro.core import registry
+    from repro.core.types import DCS3GDConfig
+
+    n_leaves, W = 10, 4
+    params = {f"w{i}": jnp.ones((8, 8), jnp.float32)
+              for i in range(n_leaves)}
+
+    def loss_fn(p, b):
+        acc = 0.0
+        for v in p.values():
+            acc = acc + jnp.mean((b["x"] @ v) ** 2)
+        return acc
+
+    batch = {"x": jnp.ones((W, 2, 8), jnp.float32)}
+    cfg = DCS3GDConfig(comm_dtype="bfloat16", total_steps=1)
+
+    def counts(buckets):
+        alg = registry.make("dc_s3gd", cfg, n_workers=W, buckets=buckets)
+        state = alg.init(params)
+        return _lowered_op_counts(
+            lambda s, b: alg.step(s, b, loss_fn=loss_fn), state, batch)
+
+    r0, c0 = counts(0)
+    r2, c2 = counts(2)
+    assert r2 < r0, (r2, r0)
+    assert c2 < c0, (c2, c0)
