@@ -5,13 +5,19 @@ Times the jitted train step for the full hot-path grid
     {dc_s3gd, ssgd} x {mean_allreduce, gossip, hierarchical}
                     x {use_kernels on/off} x {buckets 0/BUCKETS}
 
-on the reduced transformer (the CI smoke model; on real hardware pass a
-bigger ``--arch`` through ``repro.launch.train`` instead) and, with
-``--json``, writes ``BENCH_step_time.json``: one row per config with
-measured ms/step plus the per-step HLO ``reduce``/``convert`` op counts
-of the lowered step — the static evidence that bucketing collapses
-per-leaf wire ops (Dynamic-SSP's lesson: measure per-step cost, don't
-assume it).
+plus the error-feedback compressed reducers ``{topk, powersgd}`` at the
+bucketed setting (compression is per bucket; ``buckets=0`` has no flat
+wire to compress), on the reduced transformer (the CI smoke model; on
+real hardware pass a bigger ``--arch`` through ``repro.launch.train``
+instead) and, with ``--json``, writes ``BENCH_step_time.json``: one row
+per config with measured ms/step, the per-step HLO ``reduce``/
+``convert`` op counts of the lowered step — the static evidence that
+bucketing collapses per-leaf wire ops — and the **wire-bytes column**:
+``wire_bytes_per_step`` is the per-worker bytes each reducer puts on the
+wire at the lowered bucket layout (padded `BucketPlan` sizes for
+bucketed rows, exact leaf sizes per-leaf), ``wire_compression`` the
+dense/compressed ratio, so the file shows the compression win, not just
+ms/step (Dynamic-SSP's lesson: measure per-step cost, don't assume it).
 
 Step times are measured with buffer donation in effect (the Engine's
 jitted step donates the TrainState), so the numbers include the
@@ -29,6 +35,9 @@ from benchmarks.common import emit, requested_algos
 
 BUCKETS = 4
 REDUCERS = ("mean_allreduce", "gossip", "hierarchical")
+# compressed reducers ride the bucketed wire only (per-bucket sparsify /
+# low-rank — repro.core.compress); grid them at buckets=BUCKETS
+COMPRESSED = ("topk", "powersgd")
 FULL_ALGOS = ("dc_s3gd", "ssgd")
 # the committed perf-trajectory baseline is only ever written by a full
 # (non-smoke, full-grid) run; smoke/partial runs go to a sibling name so
@@ -53,6 +62,35 @@ def _hlo_counts(step_fn, state, batch) -> dict:
             "hlo_convert_ops": txt.count("stablehlo.convert")}
 
 
+def _wire_columns(alg, algo: str, state) -> dict:
+    """Per-worker wire payload of one step at the lowered layout.
+
+    Bucketed rows use the padded `BucketPlan` sizes (what the lowered
+    step actually moves); per-leaf rows the exact canonical leaf sizes.
+    ``wire_compression`` is the one-shot dense payload (mean_allreduce
+    at the same layout/``comm_dtype``) over the reducer's own payload:
+    1.0 for the dense mean, BELOW 1 for multi-hop topologies (gossip /
+    hierarchical move the payload once per hop), and the headline
+    10–100x for the compressed reducers."""
+    import jax.numpy as jnp
+
+    red = getattr(alg, "reducer", None)
+    if red is None or not hasattr(red, "wire_bytes"):
+        return {}
+    if getattr(alg, "buckets", 0):
+        sizes = list(alg._plan(state.params).bucket_sizes)
+    else:
+        import jax
+        stacked = algo != "ssgd"   # dc_s3gd/stale params are (W, ...)
+        sizes = [x.size // (x.shape[0] if stacked else 1)
+                 for x in jax.tree.leaves(state.params)]
+    wire = int(red.wire_bytes(sizes))
+    dense = sum(sizes) * jnp.dtype(getattr(red, "comm_dtype",
+                                           "float32")).itemsize
+    return {"wire_bytes_per_step": wire,
+            "wire_compression": round(dense / max(wire, 1), 2)}
+
+
 def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
                 model, data, *, n_workers: int, batch_per_worker: int,
                 steps: int, warmup: int) -> dict:
@@ -67,6 +105,7 @@ def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
     counts = _hlo_counts(step_fn, state,
                          worker_batches(data, 0, n_workers,
                                         batch_per_worker))
+    counts.update(_wire_columns(alg, algo, state))
     for it in range(warmup):
         state, metrics = step_fn(state,
                                  worker_batches(data, it, n_workers,
@@ -103,22 +142,26 @@ def main(args=None):
              if a in FULL_ALGOS]
     rows = []
     for algo in algos:
-        for reducer in REDUCERS:
-            for buckets in (0, BUCKETS):
-                # the Pallas tail only exists on dc_s3gd (ssgd has no
-                # update tail to fuse) — skip the redundant axis there
-                for uk in ((False, True) if algo == "dc_s3gd"
-                           else (False,)):
-                    row = time_config(algo, reducer, uk, buckets, model,
-                                      data, n_workers=W,
-                                      batch_per_worker=bpw, steps=steps,
-                                      warmup=warmup)
-                    rows.append(row)
-                    emit(f"step_time_{algo}_{reducer}"
-                         f"{'_kernels' if uk else ''}_b{buckets}",
-                         row["ms_per_step"] * 1e3,
-                         f"reduce_ops={row['hlo_reduce_ops']};"
-                         f"convert_ops={row['hlo_convert_ops']}")
+        # dense topologies over {0, BUCKETS}; compressed reducers only at
+        # the bucketed setting (they consume the flat-buffer wire)
+        grid = [(r, b) for r in REDUCERS for b in (0, BUCKETS)] \
+            + [(r, BUCKETS) for r in COMPRESSED]
+        for reducer, buckets in grid:
+            # the Pallas tail only exists on dc_s3gd (ssgd has no
+            # update tail to fuse) — skip the redundant axis there
+            for uk in ((False, True) if algo == "dc_s3gd"
+                       else (False,)):
+                row = time_config(algo, reducer, uk, buckets, model,
+                                  data, n_workers=W,
+                                  batch_per_worker=bpw, steps=steps,
+                                  warmup=warmup)
+                rows.append(row)
+                emit(f"step_time_{algo}_{reducer}"
+                     f"{'_kernels' if uk else ''}_b{buckets}",
+                     row["ms_per_step"] * 1e3,
+                     f"reduce_ops={row['hlo_reduce_ops']};"
+                     f"convert_ops={row['hlo_convert_ops']};"
+                     f"wire_bytes={row.get('wire_bytes_per_step', '-')}")
 
     if getattr(args, "json", False):
         out = {

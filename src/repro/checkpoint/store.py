@@ -43,8 +43,16 @@ def save_pytree(path: str | Path, tree: PyTree, *, step: Optional[int] = None,
     return path if path.suffix == ".npz" else path.with_suffix(path.suffix + ".npz")
 
 
-def restore_pytree(path: str | Path, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (names must match)."""
+def restore_pytree(path: str | Path, like: PyTree,
+                   *, cast_dtypes: bool = False) -> PyTree:
+    """Restore into the structure of ``like`` (names must match).
+
+    Shapes AND dtypes are validated against the template: an f32
+    checkpoint restored into a bf16 ``state_dtype`` run used to silently
+    flip the carried-state dtype mid-training.  Mismatches raise like the
+    shape path; pass ``cast_dtypes=True`` to instead cast every restored
+    leaf to the template's dtype (an explicit precision change, e.g. a
+    deliberate f32 -> bf16 state narrowing)."""
     data = np.load(_resolve(path), allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
     names, like_leaves, treedef = _flatten_with_names(like)
@@ -58,6 +66,16 @@ def restore_pytree(path: str | Path, like: PyTree) -> PyTree:
     if bad:
         raise ValueError(f"checkpoint shape mismatch (ckpt vs template): "
                          f"{bad[:5]}")
+    bad_dt = [(n, str(x.dtype), str(jnp.dtype(l.dtype)))
+              for n, x, l in zip(names, leaves, like_leaves)
+              if hasattr(l, "dtype") and x.dtype != jnp.dtype(l.dtype)]
+    if bad_dt and not cast_dtypes:
+        raise ValueError(f"checkpoint dtype mismatch (ckpt vs template): "
+                         f"{bad_dt[:5]} — pass cast_dtypes=True for a "
+                         f"deliberate precision change")
+    if bad_dt:
+        leaves = [x.astype(l.dtype) if hasattr(l, "dtype") else x
+                  for x, l in zip(leaves, like_leaves)]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

@@ -118,6 +118,31 @@ class Reducer(Protocol):
     (1, ...) for a global mean (``mean_allreduce``), (W, ...) for
     per-worker neighborhood reductions (``gossip``).  f32 out; the wire
     dtype (``comm_dtype``) is the reducer's own concern.
+
+    **Stateful reducers** (``stateless = False`` — the error-feedback
+    compressed reducers in `repro.core.compress`) carry per-worker state
+    across steps in ``TrainState.comm["reducer"]`` — the residual of what
+    compression dropped, warm-started projection matrices.  They add
+    three optional hooks, mirroring `StalenessPolicy`:
+
+    * ``init(n_workers, plan)`` — the carried state for a given
+      `repro.parallel.buckets.BucketPlan` (compression operates per
+      bucket, so a plan — ``buckets > 0`` — is required);
+    * ``state_specs(axes, plan)`` — `PartitionSpec`s matching ``init``'s
+      structure;
+    * ``__call__(wire, rstate)`` — returns ``(reduced, new rstate)``
+      instead of the bare reduction.
+
+    Plain reducers omit all three and keep the one-argument call; the
+    algorithms branch on ``stateless`` (absent attribute == stateless),
+    exactly like the ``comm["staleness"]`` threading.
+
+    Two more introspection hooks every registered reducer provides:
+    ``hparams`` (the constructor knobs a checkpoint must round-trip —
+    neighbors, groups, comm_dtype, density, rank) and
+    ``wire_bytes(sizes)`` (per-worker wire payload in bytes per step for
+    buffers of ``sizes`` elements — the quantity `benchmarks/step_time`
+    reports as the compression ratio evidence).
     """
 
     name: str

@@ -120,6 +120,10 @@ class DCS3GD:
     def _reduces_weights(self) -> bool:
         return bool(getattr(self.reducer, "reduces_weights", False))
 
+    @property
+    def _reducer_stateless(self) -> bool:
+        return bool(getattr(self.reducer, "stateless", True))
+
     def _plan(self, worker_params: PyTree):
         """The (cached) static `BucketPlan` for this model, built from the
         canonical per-worker shapes of a (W, ...) state tree.  Abstract
@@ -148,6 +152,12 @@ class DCS3GD:
                 lambda p: jnp.zeros_like(p, dtype=sdt), wp)}
         if not self.staleness.stateless:
             comm["staleness"] = self.staleness.init(self.n_workers)
+        # stateful (error-feedback compressed) reducers carry residuals /
+        # warm-started factors across steps, exactly like the staleness
+        # policy state — keyed under comm["reducer"]
+        if not self._reducer_stateless:
+            comm["reducer"] = self.reducer.init(
+                self.n_workers, self._plan(wp) if self.buckets else None)
         return TrainState(params=wp, opt=opt, comm=comm,
                           step=jnp.zeros((), jnp.int32))
 
@@ -172,14 +182,26 @@ class DCS3GD:
         # (reduces_weights) mix the weights themselves, D-PSGD-style.
         # With bucketing the reducer sees a handful of contiguous flat
         # buffers instead of the param tree: one wire cast + one mean (or
-        # 2k rolls) per BUCKET, not per leaf.
+        # 2k rolls) per BUCKET, not per leaf.  Stateful (compressed)
+        # reducers additionally consume and return their carried
+        # comm["reducer"] state (error-feedback residuals).
+        rstate = None
         if self._reduces_weights:
             wire = plan.pack(state.params) if plan is not None \
                 else state.params
-            w_red = self.reducer(wire)
+            r_in = wire
+            if self._reducer_stateless:
+                w_red = self.reducer(wire)
+            else:
+                w_red, rstate = self.reducer(wire, state.comm["reducer"])
         else:
             delta_prev = state.comm["delta_prev"]   # bucketed when buckets>0
-            delta_bar = self.reducer(delta_prev)
+            r_in = delta_prev
+            if self._reducer_stateless:
+                delta_bar = self.reducer(delta_prev)
+            else:
+                delta_bar, rstate = self.reducer(delta_prev,
+                                                 state.comm["reducer"])
 
         # --- g_i = ∇l(w_i): per-worker gradients (the compute overlapped)
         grads, loss = _vgrads(loss_fn, state.params, batch, cfg.microbatches)
@@ -218,12 +240,20 @@ class DCS3GD:
             # lax.cond (not where): the revoked-window branch costs a full
             # params-tree mean — only pay it on the steps that take it
             D = jax.lax.cond(admit, lambda: D, _sync_pull)
+            if rstate is not None and hasattr(self.reducer, "revoke"):
+                # a revoked window discards the reducer output: the
+                # compressed payload never reached the trajectory, so it
+                # must return to the error-feedback residual, not vanish
+                rstate = jax.lax.cond(
+                    admit, lambda: rstate,
+                    lambda: self.reducer.revoke(
+                        r_in, state.comm["reducer"], rstate))
             pol_metrics = {"ssp_admit": admit.astype(jnp.float32)}
 
         if self.use_kernels:
             return self._fused_tail(state, grads, D, loss, lr, wd,
                                     plan=plan, pstate=pstate,
-                                    pol_metrics=pol_metrics)
+                                    pol_metrics=pol_metrics, rstate=rstate)
 
         if plan is not None:
             # per-leaf reference tail: leave the flat-buffer world here.
@@ -261,11 +291,13 @@ class DCS3GD:
             **pol_metrics,
         }
         return TrainState(new_params, opt,
-                          self._comm(delta, sdt, pstate, plan=plan),
+                          self._comm(delta, sdt, pstate, plan=plan,
+                                     rstate=rstate),
                           state.step + 1), metrics
 
     def _comm(self, delta: PyTree, sdt, pstate: Optional[PyTree] = None, *,
-              plan=None, packed: bool = False) -> PyTree:
+              plan=None, packed: bool = False,
+              rstate: Optional[PyTree] = None) -> PyTree:
         """Next step's wire state; with a plan the carried deltas are the
         flat buckets themselves (``packed=True`` when ``delta`` already
         is the bucket list, e.g. from the fused bucketed tail)."""
@@ -279,6 +311,8 @@ class DCS3GD:
                                                delta)}
         if pstate is not None:
             comm["staleness"] = pstate
+        if rstate is not None:
+            comm["reducer"] = rstate
         return comm
 
     def eval_params(self, state: TrainState) -> PyTree:
@@ -296,6 +330,9 @@ class DCS3GD:
         overrides = {}
         if "staleness" in state.comm:
             overrides["staleness"] = self.staleness.state_specs(axes)
+        if "reducer" in state.comm:
+            overrides["reducer"] = self.reducer.state_specs(
+                axes, self._plan(state.params) if self.buckets else None)
         if self.buckets and "delta_prev" in state.comm:
             # bucketed comm state: (W, bucket) buffers — worker axes on the
             # leading dim, the contiguous flat dim never split mid-leaf
@@ -336,7 +373,8 @@ class DCS3GD:
 
     def _fused_tail(self, state: TrainState, grads, D, loss, lr, wd, *,
                     plan=None, pstate: Optional[PyTree] = None,
-                    pol_metrics: Optional[Metrics] = None
+                    pol_metrics: Optional[Metrics] = None,
+                    rstate: Optional[PyTree] = None
                     ) -> Tuple[TrainState, Metrics]:
         cfg = self.cfg
         assert self.local_optimizer.name == "momentum" \
@@ -378,7 +416,7 @@ class DCS3GD:
             }
             return TrainState(new_params, opt,
                               self._comm(delta_b, sdt, pstate, plan=plan,
-                                         packed=True),
+                                         packed=True, rstate=rstate),
                               state.step + 1), metrics
 
         def per_worker(g_i, d_i, m_i, w_i):
@@ -399,7 +437,7 @@ class DCS3GD:
         }
         opt = jax.tree.map(lambda x: x.astype(sdt), {"m": m_new})
         return TrainState(new_params, opt,
-                          self._comm(delta_f32, sdt, pstate),
+                          self._comm(delta_f32, sdt, pstate, rstate=rstate),
                           state.step + 1), metrics
 
 

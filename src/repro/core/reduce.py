@@ -29,6 +29,10 @@ from repro.core import registry
 PyTree = Any
 
 
+def _wire_itemsize(comm_dtype) -> int:
+    return jnp.dtype(comm_dtype).itemsize
+
+
 @registry.register(registry.REDUCER, "mean_allreduce")
 class MeanAllReduce:
     """Global mean over the worker axis, cast to ``comm_dtype`` on the
@@ -46,6 +50,18 @@ class MeanAllReduce:
     def __init__(self, cfg=None, *, comm_dtype: str | None = None):
         self.comm_dtype = comm_dtype if comm_dtype is not None else \
             (cfg.comm_dtype if cfg is not None else "float32")
+
+    @property
+    def hparams(self) -> dict:
+        """Constructor knobs a checkpoint must round-trip (see
+        ``Engine.ckpt_meta`` / ``algorithm_for_checkpoint``)."""
+        return {"comm_dtype": self.comm_dtype}
+
+    def wire_bytes(self, sizes) -> int:
+        """Per-worker wire payload per step for leaves/buckets of
+        ``sizes`` elements (topology factors — ring hops, tree fan-in —
+        excluded; they multiply dense and compressed payloads alike)."""
+        return sum(sizes) * _wire_itemsize(self.comm_dtype)
 
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)
@@ -72,24 +88,44 @@ class GossipReduce:
     reduces_weights = True
 
     def __init__(self, cfg=None, *, comm_dtype: str | None = None,
-                 neighbors: int = 1):
+                 neighbors: int | None = None):
         self.comm_dtype = comm_dtype if comm_dtype is not None else \
             (cfg.comm_dtype if cfg is not None else "float32")
-        self.neighbors = neighbors
+        self.neighbors = neighbors if neighbors is not None else \
+            (cfg.gossip_neighbors if cfg is not None else 1)
+
+    @property
+    def hparams(self) -> dict:
+        return {"comm_dtype": self.comm_dtype, "neighbors": self.neighbors}
+
+    def wire_bytes(self, sizes) -> int:
+        # the worker's row crosses the wire once per ring neighbor (2k
+        # collective-permutes; small rings dedup to fewer, but W is not
+        # known here — count the full-ring upper bound)
+        return 2 * self.neighbors * sum(sizes) \
+            * _wire_itemsize(self.comm_dtype)
 
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)
         k = self.neighbors
 
         def red(d):
+            W = d.shape[0]
+            # distinct ring offsets only: with 2k+1 > W the ±s rolls alias
+            # (W=2, k=1: left == right neighbor) and summing roll(+s) AND
+            # roll(-s) would count the same worker twice while dividing by
+            # 2k+1 — a biased mixing row.  Dedup mod W, exactly like
+            # `HierarchicalReduce` does for its group ring.
+            offs = sorted({s % W for s in range(-k, k + 1)})
             # only neighbor terms cross the wire — the self term stays f32
             # (no reason to quantize a worker's own contribution)
             wire = d.astype(dt)
             acc = d.astype(jnp.float32)
-            for s in range(1, k + 1):
-                acc = acc + jnp.roll(wire, s, axis=0).astype(jnp.float32) \
-                    + jnp.roll(wire, -s, axis=0).astype(jnp.float32)
-            return acc / jnp.float32(2 * k + 1)
+            for off in offs:
+                if off:
+                    acc = acc + jnp.roll(wire, off, axis=0) \
+                        .astype(jnp.float32)
+            return acc / jnp.float32(len(offs))
 
         return jax.tree.map(red, tree)
 
@@ -115,12 +151,26 @@ class HierarchicalReduce:
     reduces_weights = True
 
     def __init__(self, cfg=None, *, comm_dtype: str | None = None,
-                 groups: int | None = None, neighbors: int = 1):
+                 groups: int | None = None, neighbors: int | None = None):
         self.comm_dtype = comm_dtype if comm_dtype is not None else \
             (cfg.comm_dtype if cfg is not None else "float32")
         self.groups = groups if groups is not None else \
             (cfg.hier_groups if cfg is not None else 2)
-        self.neighbors = neighbors
+        self.neighbors = neighbors if neighbors is not None else \
+            (cfg.gossip_neighbors if cfg is not None else 1)
+
+    @property
+    def hparams(self) -> dict:
+        return {"comm_dtype": self.comm_dtype, "groups": self.groups,
+                "neighbors": self.neighbors}
+
+    def wire_bytes(self, sizes) -> int:
+        # intra-group: the worker's row once over the fast wire; inter:
+        # the group mean once per ring neighbor over the slow wire
+        # (per-worker amortized share is 1/(W/G) of it — count the full
+        # payload, conservative)
+        return (1 + 2 * self.neighbors) * sum(sizes) \
+            * _wire_itemsize(self.comm_dtype)
 
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)

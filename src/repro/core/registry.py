@@ -38,6 +38,7 @@ _REGISTRY: Dict[str, Dict[str, Callable[..., Any]]] = {
 # imported lazily, once, the first time a lookup misses
 _PROVIDERS = (
     "repro.core.reduce",
+    "repro.core.compress",
     "repro.core.compensate",
     "repro.core.staleness",
     "repro.optim.local",
@@ -103,10 +104,14 @@ def make_local_optimizer(spec, cfg=None):
     return _lookup(LOCAL_OPTIMIZER, spec)(cfg)
 
 
-def make_reducer(spec, cfg=None):
+def make_reducer(spec, cfg=None, **hparams):
+    """Name (or object) -> `Reducer`.  ``hparams`` override the config
+    defaults (neighbors / groups / comm_dtype / density / rank ...) — the
+    checkpoint-metadata path uses this to rebuild the exact reducer a run
+    trained with, not the flag defaults."""
     if not isinstance(spec, str):
         return spec
-    return _lookup(REDUCER, spec)(cfg)
+    return _lookup(REDUCER, spec)(cfg, **hparams)
 
 
 def make_compensator(spec, cfg=None):

@@ -60,10 +60,21 @@ class SSGD:
         from repro.parallel import buckets as B
         return B.cached_plan(self._plan_cache, params, self.buckets)
 
+    @property
+    def _reducer_stateless(self) -> bool:
+        return bool(getattr(self.reducer, "stateless", True))
+
     def init(self, params: PyTree) -> TrainState:
+        comm = {}
+        # error-feedback compressed reducers carry per-worker residuals
+        # across steps in comm["reducer"], same seam as DC-S3GD
+        if not self._reducer_stateless:
+            comm["reducer"] = self.reducer.init(
+                self.n_workers, self._plan(params) if self.buckets
+                else None)
         return TrainState(params=params,
                           opt=self.local_optimizer.init(params),
-                          comm={}, step=jnp.zeros((), jnp.int32))
+                          comm=comm, step=jnp.zeros((), jnp.int32))
 
     def step(self, state: TrainState, batch: PyTree, *, loss_fn: LossFn
              ) -> Tuple[TrainState, Metrics]:
@@ -79,11 +90,21 @@ class SSGD:
         # buffers — one cast+reduce per bucket — and the pack/unpack is a
         # bitwise reshape, so the trajectory is unchanged.
         g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        comm = {}
         if self.buckets:
             plan = self._plan(state.params)
-            grads = plan.unpack(collapse_worker_axis(
-                self.reducer(plan.pack(g32))))
+            wire = plan.pack(g32)
+            if self._reducer_stateless:
+                red = self.reducer(wire)
+            else:
+                red, comm["reducer"] = self.reducer(
+                    wire, state.comm["reducer"])
+            grads = plan.unpack(collapse_worker_axis(red))
         else:
+            if not self._reducer_stateless:
+                raise ValueError(
+                    f"reducer {self.reducer.name!r} needs the bucketed "
+                    f"wire: construct with buckets > 0")
             grads = collapse_worker_axis(self.reducer(g32))
         delta, opt = self.local_optimizer(grads, state.opt, state.params,
                                           {"lr": lr, "weight_decay": wd})
@@ -91,7 +112,7 @@ class SSGD:
             lambda w, dw: (w.astype(jnp.float32)
                            + dw.astype(jnp.float32)).astype(w.dtype),
             state.params, delta)
-        return (TrainState(new_params, opt, {}, state.step + 1),
+        return (TrainState(new_params, opt, comm, state.step + 1),
                 {"loss": jnp.mean(loss), "lr": lr, "wd": wd})
 
     def eval_params(self, state: TrainState) -> PyTree:
@@ -102,10 +123,16 @@ class SSGD:
     def state_specs(self, model_cfg, state: TrainState,
                     axes: MeshAxes) -> TrainState:
         """Replicated over workers: canonical param layout, no worker axis
-        on any state leaf."""
+        on any state leaf — except a stateful reducer's per-worker
+        residuals, which lead with the worker axes."""
+        overrides = {}
+        if "reducer" in state.comm:
+            overrides["reducer"] = self.reducer.state_specs(
+                axes, self._plan(state.params) if self.buckets else None)
         return shd.train_state_specs(model_cfg, state,
                                      model_size=axes.model_size,
-                                     worker_axes=None)
+                                     worker_axes=None,
+                                     comm_overrides=overrides)
 
     def batch_specs(self, model_cfg, batch: PyTree,
                     axes: MeshAxes) -> PyTree:

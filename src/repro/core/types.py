@@ -255,6 +255,14 @@ class DCS3GDConfig:
     # 'hierarchical' reducer: number of worker groups (= pods) whose means
     # gossip over the slow wire; must divide n_workers (Layered SGD)
     hier_groups: int = 2
+    # 'gossip' reducer: ring neighbors averaged on each side per step
+    # (the D-PSGD mixing width; also the inter-pod width of 'hierarchical')
+    gossip_neighbors: int = 1
+    # compressed reducers (repro.core.compress): fraction of each bucket's
+    # elements the 'topk'/'randk' sparsifiers keep on the wire ...
+    compress_density: float = 0.01
+    # ... and the rank of the 'powersgd' low-rank approximation
+    compress_rank: int = 4
     # flat-buffer comm bucketing: target number of contiguous BLOCK-aligned
     # buckets the param tree packs into for the wire + the fused Pallas
     # tail (repro.parallel.buckets); 0 = legacy per-leaf paths

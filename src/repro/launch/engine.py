@@ -43,8 +43,8 @@ from repro.parallel import sharding as shd
 PyTree = Any
 
 # checkpoint metadata keys describing the algorithm that produced a state
-CKPT_ALGO_KEYS = ("algo", "reducer", "local_optimizer", "n_workers",
-                  "staleness", "ssp_threshold", "buckets")
+CKPT_ALGO_KEYS = ("algo", "reducer", "reducer_opts", "local_optimizer",
+                  "n_workers", "staleness", "ssp_threshold", "buckets")
 
 
 # ---------------------------------------------------------------------------
@@ -202,6 +202,13 @@ class Engine:
             "algo": alg.name,
             "n_workers": getattr(alg, "n_workers", None),
             "reducer": getattr(getattr(alg, "reducer", None), "name", None),
+            # reducer hyper-parameters travel with the reducer name — a
+            # `hierarchical groups=4` or `gossip neighbors=2` (or a
+            # compressed `topk density=0.05`) run restored with only the
+            # name silently rebuilt with the DEFAULT topology: a
+            # wrong-mixing-matrix resume no shape check catches
+            "reducer_opts": getattr(
+                getattr(alg, "reducer", None), "hparams", None),
             "local_optimizer": getattr(
                 getattr(alg, "local_optimizer", None), "name", None),
             "staleness": getattr(
@@ -283,6 +290,7 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                              n_workers: int = 1,
                              local_optimizer: str = "momentum",
                              reducer: str = "mean_allreduce",
+                             reducer_opts: Optional[dict] = None,
                              staleness: str = "fixed",
                              ssp_threshold: int = 4,
                              buckets: int = 0,
@@ -295,11 +303,14 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
     resolved {algo, reducer, local_optimizer, n_workers, staleness}).
     Before metadata, a mismatched ``--local-optimizer`` silently restored
     into wrong-shaped opt slots cast by the template — now the template is
-    built from what actually trained.
+    built from what actually trained.  ``reducer_opts`` (the reducer's
+    recorded ``hparams`` — neighbors, groups, comm_dtype, density, rank)
+    rebuild the exact topology/compressor, not the flag defaults.
     """
     meta = checkpoint_meta(path)
     resolved = {"algo": algo, "n_workers": n_workers,
                 "local_optimizer": local_optimizer, "reducer": reducer,
+                "reducer_opts": reducer_opts,
                 "staleness": staleness, "ssp_threshold": ssp_threshold,
                 "buckets": buckets}
     for k in CKPT_ALGO_KEYS:
@@ -308,10 +319,12 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
     cfg = dc_cfg if dc_cfg is not None else \
         DCS3GDConfig(local_optimizer=resolved["local_optimizer"],
                      ssp_threshold=int(resolved["ssp_threshold"]))
+    red = registry.make_reducer(resolved["reducer"], cfg,
+                                **(resolved["reducer_opts"] or {}))
     alg = registry.make(resolved["algo"], cfg,
                         n_workers=int(resolved["n_workers"]),
                         local_optimizer=resolved["local_optimizer"],
-                        reducer=resolved["reducer"],
+                        reducer=red,
                         staleness=resolved["staleness"],
                         buckets=int(resolved["buckets"] or 0))
     return alg, resolved

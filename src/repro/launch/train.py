@@ -43,7 +43,16 @@ def build_argparser():
                     help="'stale' = DC-S3GD with lambda0=0 (no compensation)")
     ap.add_argument("--reducer", choices=registry.names(registry.REDUCER),
                     default="mean_allreduce",
-                    help="cross-worker reduce topology")
+                    help="cross-worker reduce topology (topk/randk/"
+                         "powersgd = error-feedback compressed; need "
+                         "--buckets > 0)")
+    ap.add_argument("--gossip-neighbors", type=int, default=1,
+                    help="ring neighbors per side for --reducer gossip")
+    ap.add_argument("--compress-density", type=float, default=0.01,
+                    help="kept fraction per bucket for --reducer "
+                         "topk/randk")
+    ap.add_argument("--compress-rank", type=int, default=4,
+                    help="low-rank factor width for --reducer powersgd")
     ap.add_argument("--local-optimizer", default=None,
                     choices=registry.names(registry.LOCAL_OPTIMIZER),
                     help="override cfg.local_optimizer")
@@ -83,6 +92,9 @@ def _adopt_resume_meta(args) -> None:
         return
     args.algo = adopted.get("algo", args.algo)
     args.reducer = adopted.get("reducer", args.reducer)
+    # reducer hyper-params (neighbors/groups/comm_dtype/density/rank)
+    # recorded at save time rebuild the exact topology, not the defaults
+    args.reducer_opts = adopted.get("reducer_opts", None)
     args.local_optimizer = adopted.get("local_optimizer",
                                        args.local_optimizer)
     args.staleness = adopted.get("staleness", args.staleness)
@@ -110,13 +122,19 @@ def run(args) -> dict:
         total_steps=args.steps,
         local_optimizer=args.local_optimizer or "momentum",
         ssp_threshold=args.ssp_threshold,
+        gossip_neighbors=args.gossip_neighbors,
+        compress_density=args.compress_density,
+        compress_rank=args.compress_rank,
     )
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     n_params = sum(x.size for x in jax.tree.leaves(params))
+    reducer = registry.make_reducer(args.reducer, dc_cfg,
+                                    **(getattr(args, "reducer_opts", None)
+                                       or {}))
     alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
-                        reducer=args.reducer, staleness=args.staleness,
+                        reducer=reducer, staleness=args.staleness,
                         use_kernels=args.use_kernels, buckets=args.buckets)
     engine = Engine(model, alg)
     state = alg.init(params)

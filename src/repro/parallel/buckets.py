@@ -147,15 +147,18 @@ class BucketPlan:
 
 
 def cached_plan(cache: dict, tree: PyTree, n_buckets: int, *,
+                block: Optional[int] = None,
                 strip_leading_axis: bool = False) -> BucketPlan:
     """Memoized `plan_buckets` keyed on the tree's (shape, dtype) layout —
     the per-algorithm plan cache (DCS3GD/SSGD carry one ``cache`` dict
-    each; a step retrace with the same model reuses the plan)."""
+    each; a step retrace with the same model reuses the plan).  ``block``
+    is part of the key: plans with different alignment must not collide
+    (their padded bucket sizes differ)."""
     key = (tuple((tuple(x.shape), jnp.dtype(x.dtype).name)
                  for x in jax.tree.leaves(tree)),
-           n_buckets, strip_leading_axis)
+           n_buckets, block, strip_leading_axis)
     if key not in cache:
-        cache[key] = plan_buckets(tree, n_buckets,
+        cache[key] = plan_buckets(tree, n_buckets, block=block,
                                   strip_leading_axis=strip_leading_axis)
     return cache[key]
 
@@ -174,6 +177,10 @@ def plan_buckets(tree: PyTree, n_buckets: int, *,
     assert n_buckets > 0, "use the legacy per-leaf path for buckets=0"
     block = K.BLOCK if block is None else block
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError(
+            "plan_buckets: cannot bucket an empty pytree (zero leaves) — "
+            "pass the parameter tree, not a pruned/placeholder one")
     shapes = [tuple(x.shape[1:] if strip_leading_axis else x.shape)
               for x in leaves]
     def _numel(shape: Tuple[int, ...]) -> int:

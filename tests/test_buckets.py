@@ -96,6 +96,35 @@ def test_plan_from_abstract_leaves_matches_concrete():
     assert pa.slots == pc.slots
 
 
+def test_cached_plan_keys_and_threads_block():
+    """Two plans differing only in ``block`` must not collide in the
+    cache (their padded bucket sizes differ)."""
+    tree = _mixed_tree()
+    cache = {}
+    p8 = B.cached_plan(cache, tree, 2, block=8)
+    p256 = B.cached_plan(cache, tree, 2, block=256)
+    assert p8.block == 8 and p256.block == 256
+    assert p8.bucket_sizes != p256.bucket_sizes
+    assert len(cache) == 2
+    # and hits are real hits
+    assert B.cached_plan(cache, tree, 2, block=8) is p8
+
+
+def test_plan_buckets_empty_tree_raises_clearly():
+    with pytest.raises(ValueError, match="empty pytree"):
+        B.plan_buckets({}, 2)
+    with pytest.raises(ValueError, match="empty pytree"):
+        B.cached_plan({}, [], 1)
+
+
+def test_plan_buckets_all_scalar_leaves():
+    tree = {"a": jnp.float32(1.5), "b": jnp.float32(-2.0)}
+    plan = B.plan_buckets(tree, 1, block=4)
+    assert _bitwise(tree, plan.unpack(plan.pack(tree)))
+    wt = jax.tree.map(lambda x: jnp.broadcast_to(x, (W,)), tree)
+    assert _bitwise(wt, plan.unpack(plan.pack(wt)))
+
+
 def test_bucket_specs_lead_with_worker_axes():
     from jax.sharding import PartitionSpec as P
     plan = B.plan_buckets(_mixed_tree(), 2)

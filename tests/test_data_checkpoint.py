@@ -69,3 +69,22 @@ def test_checkpoint_structure_mismatch_raises(tmp_path):
     save_pytree(path, {"a": jnp.zeros(2)})
     with pytest.raises(ValueError):
         restore_pytree(path, {"zz": jnp.zeros(2)})
+
+
+def test_checkpoint_dtype_mismatch_raises_or_casts(tmp_path):
+    """An f32 checkpoint restored into a bf16 template used to silently
+    adopt the checkpoint's dtypes — flipping the carried-state dtype
+    mid-training.  Now it raises like the shape path; an explicit
+    ``cast_dtypes=True`` performs the precision change deliberately."""
+    path = tmp_path / "dt.npz"
+    save_pytree(path, {"m": jnp.ones((2, 3), jnp.float32),
+                       "s": jnp.array([1, 2], jnp.int32)})
+    like = {"m": jnp.zeros((2, 3), jnp.bfloat16),
+            "s": jnp.zeros(2, jnp.int32)}
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        restore_pytree(path, like)
+    out = restore_pytree(path, like, cast_dtypes=True)
+    assert out["m"].dtype == jnp.bfloat16
+    assert out["s"].dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out["m"], np.float32),
+                                  np.ones((2, 3), np.float32))
