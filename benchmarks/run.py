@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   step_time            measured ms/step across the algo x reducer x
                        kernels x buckets grid; --json writes
                        BENCH_step_time.json (the perf trajectory)
+  serve_bench          continuous batching (paged KV) vs the fixed-batch
+                       dense decode loop on a staggered-length workload;
+                       --json writes BENCH_serve.json
 
 Algorithm / reduce-topology selection is uniform: ``--algo`` (repeatable)
 and ``--reducer`` pass through to every benchmark, which builds its
@@ -54,12 +57,12 @@ def main(argv=None) -> None:
     args = build_argparser().parse_args(argv)
 
     from benchmarks import (eq13_14_timing, fig1_error_curves, kernels_bench,
-                            roofline_table, staleness_growth, step_time,
-                            table1_convergence)
+                            roofline_table, serve_bench, staleness_growth,
+                            step_time, table1_convergence)
     mods = {m.__name__.split(".")[-1]: m
             for m in (table1_convergence, fig1_error_curves, eq13_14_timing,
                       staleness_growth, kernels_bench, roofline_table,
-                      step_time)}
+                      step_time, serve_bench)}
     selected = list(mods) if args.only is None else \
         [s.strip() for s in args.only.split(",")]
     unknown = [s for s in selected if s not in mods]

@@ -1,0 +1,182 @@
+"""Serve benchmark — continuous batching vs the fixed-batch dense loop.
+
+A staggered-length workload (equal prompts, generation lengths spread
+over a wide range) is served two ways:
+
+* **dense** — the fixed-batch `Engine.generate` scan loop: requests are
+  grouped into batches of ``--slots``; every batch decodes to its LONGEST
+  request's length (the short lanes spin uselessly) over a worst-case
+  dense cache;
+* **paged** — `repro.serve.scheduler.Scheduler` over the paged KV cache:
+  finished sequences are evicted immediately and waiting requests join
+  mid-flight, so every decode step carries (almost) only live lanes.
+
+Both paths are warmed first (compilation excluded); tokens/s counts only
+the tokens requests actually asked for — the dense path's overshoot
+decode steps are exactly the waste continuous batching removes.
+
+``--json`` writes ``BENCH_serve.json`` (``BENCH_serve.smoke.json`` for
+smoke runs): per-path tokens/s, the paged path's p50/p95 per-token
+decode latency, pool occupancy / internal fragmentation, and the
+speedup.  CI gates paged >= dense on this file (``bench-serve`` job).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+JSON_NAME = "BENCH_serve.json"
+SMOKE_JSON_NAME = "BENCH_serve.smoke.json"
+
+PROMPT_LEN = 16
+# heavy-tailed generation lengths (mean/max ~ 0.25, the shape real
+# output-length distributions have): a dense batch containing one long
+# request decodes EVERY lane to its length, so the fixed-batch loop
+# spends ~3/4 of its slot-steps on finished lanes
+GEN_LENGTHS = (2, 4, 6, 8, 12, 16, 24, 64)
+
+
+def make_workload(n: int, vocab: int, seed: int = 0):
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, PROMPT_LEN).tolist(),
+                    max_new=GEN_LENGTHS[i % len(GEN_LENGTHS)])
+            for i in range(n)]
+
+
+def dense_serve(engine, params, reqs, batch: int):
+    """Fixed-batch baseline: pad every batch to its longest request."""
+    import jax.numpy as jnp
+    walls = 0.0
+    for i in range(0, len(reqs), batch):
+        group = reqs[i:i + batch]
+        prompts = jnp.asarray(np.stack(
+            [np.asarray(r.prompt, np.int32) for r in group]))
+        gen_max = max(r.max_new for r in group)
+        t0 = time.perf_counter()
+        out = engine.generate(params, prompts, gen=gen_max)
+        jax.block_until_ready(out)
+        walls += time.perf_counter() - t0
+        for r, row in zip(group, np.asarray(out)):
+            r.out = row[:r.max_new].tolist()
+    return walls
+
+
+def paged_serve(scheduler, reqs):
+    t0 = time.perf_counter()
+    scheduler.run(reqs)
+    return time.perf_counter() - t0
+
+
+def main(args=None):
+    from benchmarks.common import emit
+    from repro.configs import get_config, reduced
+    from repro.launch.engine import Engine
+    from repro.models.transformer import Model
+    from repro.serve import Scheduler
+
+    smoke = bool(getattr(args, "smoke", False))
+    n_requests = 24 if smoke else 32
+    slots = 8
+    page_size = 16
+    max_len = PROMPT_LEN + max(GEN_LENGTHS) + 1
+    max_pages = -(-max_len // page_size)
+    pages = slots * max_pages + 1 + max_pages  # headroom: no preemption
+
+    cfg = reduced(get_config("qwen3-0.6b"))
+    model = Model(cfg, remat=False, q_chunk=16, kv_chunk=16, scan_chunk=16)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model)
+
+    useful = lambda reqs: sum(r.max_new for r in reqs)
+    passes = 3  # best-of: both walls take their fastest timed pass, so a
+    #             transient load spike can't flip the paged-vs-dense gate
+
+    # -- dense fixed-batch baseline (warm once, best of timed passes) -------
+    dense_serve(engine, params, make_workload(n_requests, cfg.vocab_size),
+                slots)
+    walls_d = []
+    for _ in range(passes):
+        reqs_d = make_workload(n_requests, cfg.vocab_size)
+        walls_d.append(dense_serve(engine, params, reqs_d, slots))
+    wall_dense = min(walls_d)
+    tok_dense = useful(reqs_d)
+
+    # -- paged continuous batching (same scheduler instance stays warm) -----
+    sch = Scheduler(model, params, slots=slots, pages=pages,
+                    page_size=page_size, max_len=max_len, decode_burst=8)
+    paged_serve(sch, make_workload(n_requests, cfg.vocab_size))
+    walls_p = []
+    for _ in range(passes):
+        sch.finished.clear()
+        sch.stats.update(decode_steps=0, prefills=0, preemptions=0,
+                         tokens=0, step_walls=[], occupancy=[])
+        reqs_p = make_workload(n_requests, cfg.vocab_size)
+        walls_p.append(paged_serve(sch, reqs_p))
+        assert all(len(r.out) == r.max_new for r in reqs_p)
+    wall_paged = min(walls_p)
+    tok_paged = useful(reqs_p)
+    summary = sch.latency_summary()
+
+    dense_tps = tok_dense / wall_dense
+    paged_tps = tok_paged / wall_paged
+    rows = [
+        {"path": "dense", "tokens": tok_dense,
+         "wall_s": round(wall_dense, 3),
+         "tokens_per_s": round(dense_tps, 1),
+         "batch": slots,
+         # worst-case dense cache the whole batch holds to the end
+         "cache_tokens_allocated": slots * max_len},
+        {"path": "paged", "tokens": tok_paged,
+         "wall_s": round(wall_paged, 3),
+         "tokens_per_s": round(paged_tps, 1),
+         "slots": slots, "pages": pages, "page_size": page_size,
+         "decode_steps": summary["decode_steps"],
+         "p50_token_latency_ms": round(
+             summary.get("p50_token_latency_s", 0.0) * 1e3, 3),
+         "p95_token_latency_ms": round(
+             summary.get("p95_token_latency_s", 0.0) * 1e3, 3),
+         "mean_pool_utilization": round(
+             summary.get("mean_pool_utilization", 0.0), 4),
+         "mean_internal_fragmentation": round(
+             summary.get("mean_internal_fragmentation", 0.0), 4),
+         "preemptions": summary["preemptions"]},
+    ]
+    for r in rows:
+        emit(f"serve_{r['path']}", 1e6 / max(r["tokens_per_s"], 1e-9),
+             f"tokens_per_s={r['tokens_per_s']}")
+    speedup = paged_tps / dense_tps
+
+    if getattr(args, "json", False):
+        out = {
+            "bench": "serve",
+            "model": cfg.name,
+            "workload": {"n_requests": n_requests,
+                         "prompt_len": PROMPT_LEN,
+                         "gen_lengths": list(GEN_LENGTHS)},
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": smoke,
+            "rows": rows,
+            "paged_speedup": round(speedup, 3),
+        }
+        name = SMOKE_JSON_NAME if smoke else JSON_NAME
+        Path(name).write_text(json.dumps(out, indent=2))
+        print(f"# wrote {name} (paged speedup {speedup:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    main(ap.parse_args())

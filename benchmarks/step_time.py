@@ -36,8 +36,11 @@ from benchmarks.common import emit, requested_algos
 BUCKETS = 4
 REDUCERS = ("mean_allreduce", "gossip", "hierarchical")
 # compressed reducers ride the bucketed wire only (per-bucket sparsify /
-# low-rank — repro.core.compress); grid them at buckets=BUCKETS
-COMPRESSED = ("topk", "powersgd")
+# low-rank — repro.core.compress); grid them at buckets=BUCKETS.
+# topk_exact is the all-gather union-support variant: its wire_bytes row
+# shows what exactness costs next to gather-free topk (k indices + up to
+# W·k union values vs k of each)
+COMPRESSED = ("topk", "topk_exact", "powersgd")
 FULL_ALGOS = ("dc_s3gd", "ssgd")
 # the committed perf-trajectory baseline is only ever written by a full
 # (non-smoke, full-grid) run; smoke/partial runs go to a sibling name so

@@ -1,0 +1,121 @@
+"""Pallas TPU paged-attention decode kernel.
+
+One new token attends over a **paged** KV cache: each sequence's keys and
+values live in fixed-size pages of a shared pool, addressed through a
+per-sequence block table (`repro.models.cache.PagedLayout`).  The XLA
+fallback materializes the whole ``(B, max_pages · page_size, KV, hd)``
+gather in HBM every step; this kernel never builds it — the block table
+rides the grid as a **scalar-prefetch** operand, so each grid step DMAs
+exactly one physical page of k and v into VMEM and folds it into the
+online-softmax state.  HBM traffic per (row, head) is the row's *live*
+pages once, plus q and the (G, hd) output tile.
+
+Layout: grid (B, KV, max_pages) — TPU executes the grid sequentially
+per core, innermost dim last, so VMEM scratch carries the (m, l, acc)
+online-softmax state across the page dimension; it is (re)initialized at
+page 0 and the output tile is written at the final page.  The k/v block
+specs index the *pool's* page dim through the prefetched block table —
+that indirection is the whole kernel.
+
+The pure-jnp oracle is `repro.kernels.ref.paged_attention_ref` (gather +
+masked softmax on the linearized view); tests sweep shapes / page sizes /
+ragged lengths against it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5)                           # (G, page_size)
+
+    kpos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[b], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, KV, G, hd); k_pool/v_pool: (num_pages, page_size, KV, hd);
+    block_tables: (B, max_pages) int32; lengths: (B,) int32 valid
+    positions per row.  Returns (B, KV, G, hd) f32.
+
+    Semantics = `repro.kernels.ref.paged_attention_ref`: attend over the
+    logical linearization of each row's block table, masking positions
+    ``>= lengths[b]`` (rows must have ``lengths >= 1``).
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, KV, G, hd = q.shape
+    page_size = k_pool.shape[1]
+    mp = block_tables.shape[1]
+
+    # (B, KV, G, hd) -> grid (B, KV, mp); pools keep their pool layout and
+    # are indexed per grid step through the prefetched block table
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, mp),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, page_size=page_size,
+                               n_pages=mp)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pool, v_pool)

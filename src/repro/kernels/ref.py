@@ -57,6 +57,33 @@ def decode_attention_ref(q, k, v, valid_len) -> jnp.ndarray:
     return jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths
+                        ) -> jnp.ndarray:
+    """One-token GQA decode attention over a PAGED KV cache.
+
+    q: (B, KV, G, hd); k_pool/v_pool: (num_pages, page_size, KV, hd) —
+    the shared page pool; block_tables: (B, max_pages) int32 physical
+    page ids in logical order; lengths: (B,) int32 valid positions per
+    row (logical position p of row b lives at
+    ``(block_tables[b, p // page_size], p % page_size)``).
+
+    Returns (B, KV, G, hd) f32.  Semantics: gather each row's pages into
+    logical order, mask positions >= lengths[b], softmax-attend — i.e.
+    exactly `decode_attention_ref` on the linearized view.
+    """
+    B, mp = block_tables.shape
+    ps = k_pool.shape[1]
+    k_lin = k_pool[block_tables].reshape(B, mp * ps, *k_pool.shape[2:])
+    v_lin = v_pool[block_tables].reshape(B, mp * ps, *v_pool.shape[2:])
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k_lin.astype(jnp.float32)) * scale
+    mask = jnp.arange(mp * ps)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v_lin.astype(jnp.float32))
+
+
 def ssm_scan_ref(a_log, dt, dtx, b, c):
     """Naive sequential oracle for `repro.kernels.ssm_scan.ssm_scan`."""
     import jax

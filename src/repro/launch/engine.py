@@ -17,9 +17,15 @@
   the matching algorithm instead of trusting re-passed flags
   (`algorithm_for_checkpoint`);
 * **the step loop** — ``fit`` runs the jitted step over a batch function
-  with logging and history collection;
-* **generation** — a single-trace `jax.lax.scan` decode loop with a
-  pluggable sampler (``greedy`` / ``categorical``).
+  with logging and history collection; ``measure_skew=True`` times every
+  step and feeds the implied per-worker progress to the staleness policy
+  (`alg.observe_progress`) so ``dynamic_ssp`` trips on real skew;
+* **generation** — delegated to the `repro.serve` subsystem:
+  ``generate`` is the one-shot scan-loop case
+  (`repro.serve.oneshot.OneShotGenerator`, compiled pairs cached on the
+  Engine), and request streams run through the continuous-batching
+  `repro.serve.scheduler.Scheduler` over the paged KV cache
+  (``docs/serve.md``).
 
 `train.py`, `serve.py`, and `dryrun.py` are argument parsing plus Engine
 calls.
@@ -28,7 +34,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,31 +45,15 @@ from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.launch.mesh import make_axes
 from repro.parallel import sharding as shd
+# the samplers (and the scan-loop generate they feed) live in the serve
+# subsystem now; re-exported here for the existing import sites
+from repro.serve.oneshot import SAMPLERS, OneShotGenerator
 
 PyTree = Any
 
 # checkpoint metadata keys describing the algorithm that produced a state
 CKPT_ALGO_KEYS = ("algo", "reducer", "reducer_opts", "local_optimizer",
                   "n_workers", "staleness", "ssp_threshold", "buckets")
-
-
-# ---------------------------------------------------------------------------
-# pluggable samplers for the decode loop
-# ---------------------------------------------------------------------------
-
-
-def _greedy(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
-    del key, temperature
-    return jnp.argmax(logits, axis=-1)
-
-
-def _categorical(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
-    t = max(float(temperature), 1e-6)
-    return jax.random.categorical(key, logits / t, axis=-1)
-
-
-SAMPLERS: Dict[str, Callable] = {"greedy": _greedy,
-                                 "categorical": _categorical}
 
 
 def mesh_context(mesh):
@@ -89,6 +79,10 @@ class Engine:
         self.model = model
         self.alg = alg
         self.mesh = mesh
+        # compiled (prefill, decode-loop) pairs for `generate`, keyed by
+        # (shape, cache_len, sampler, ...) — rebuilt jits used to leak a
+        # recompilation into EVERY repeated serve call
+        self._oneshot: Optional[OneShotGenerator] = None
 
     # -- mesh / sharding seam ----------------------------------------------
 
@@ -163,7 +157,9 @@ class Engine:
 
     def fit(self, state: PyTree, batch_fn: Callable[[int], PyTree], *,
             steps: int, start: int = 0, log_every: int = 10,
-            verbose: bool = True) -> Tuple[PyTree, list, float]:
+            verbose: bool = True, measure_skew: bool = False,
+            skew_probe: Optional[Callable[[int, float], Any]] = None
+            ) -> Tuple[PyTree, list, float]:
         """Run the step loop; returns (state, metric history, wall s).
 
         The loop stays on jax's async dispatch queue: non-logging
@@ -171,19 +167,64 @@ class Engine:
         ``float``/``block_until_ready`` — a per-step host sync would
         serialize dispatch against compute and hide nothing).  On
         ``log_every`` boundaries the whole metrics dict is fetched with
-        ONE ``jax.device_get`` (which blocks on just that step)."""
+        ONE ``jax.device_get`` (which blocks on just that step).
+
+        ``measure_skew=True`` (train ``--measure-skew``) drives the
+        staleness policy from **measured wall-clock step times** instead
+        of only host-injected observations: each step is synced and
+        timed, and every worker's progress counter advances by the steps
+        it would have completed free-running within the measured wall
+        step (``max(durs) / durs[w]``) before being fed to
+        ``alg.observe_progress`` — so ``dynamic_ssp`` trips on real
+        skew.  On a revoked step (``ssp_admit == 0``) the measured
+        counters collapse to the leader, mirroring the policy's own
+        sync semantics (`repro.core.staleness`): a transient slowdown
+        costs ONE sync step, not a permanent offset.  In the lockstep
+        single-host simulation every worker shares the measured step
+        time (skew 0 — correct: lockstep HAS no skew);
+        ``skew_probe(it, dt) -> per-worker durations`` is the seam a
+        heterogeneous deployment (or a test) plugs real per-worker
+        timings into (a non-positive duration means a stalled worker:
+        its counter simply stops advancing).  The per-step sync this
+        needs serializes dispatch — only paid behind the flag."""
         first = batch_fn(start) if steps > start else None
         step_fn = self.jit_train_step(state, first)
+        measuring = (measure_skew and self.alg is not None
+                     and hasattr(self.alg, "observe_progress")
+                     and not getattr(getattr(self.alg, "staleness", None),
+                                     "stateless", True))
+        n_workers = getattr(self.alg, "n_workers", 1) if measuring else 0
+        vprogress = [0.0] * n_workers  # measured free-running step counts
         history = []
         t0 = time.time()
         for it in range(start, steps):
             batch = first if it == start else batch_fn(it)
+            ts = time.perf_counter()
             state, metrics = step_fn(state, batch)
+            if measuring:
+                jax.block_until_ready(metrics)
+                dt = time.perf_counter() - ts
+                durs = list(skew_probe(it, dt)) if skew_probe is not None \
+                    else [dt] * n_workers
+                assert len(durs) == n_workers, (len(durs), n_workers)
+                if float(jax.device_get(metrics.get("ssp_admit", 1.0))) \
+                        == 0.0:
+                    # the policy revoked the window and did its blocking
+                    # pull: the sync resolved the accumulated skew, so
+                    # the measured counters collapse to the leader too
+                    vprogress = [max(vprogress)] * n_workers
+                wall = max(durs)
+                vprogress = [p + (wall / d if d > 0 else 0.0)
+                             for p, d in zip(vprogress, durs)]
+                progress = [int(p) for p in vprogress]
+                state = self.alg.observe_progress(state, progress)
             if it % log_every == 0 or it == steps - 1:
                 m = {k: float(v)
                      for k, v in jax.device_get(metrics).items()}
                 m["step"] = it
                 m["wall_s"] = round(time.time() - t0, 1)
+                if measuring:
+                    m["measured_skew"] = max(progress) - min(progress)
                 history.append(m)
                 if verbose:
                     extra = ""
@@ -236,49 +277,25 @@ class Engine:
 
     def generate(self, params: PyTree, prompts: jnp.ndarray, *, gen: int,
                  sampler: Optional[str] = None, temperature: float = 0.0,
-                 key=None, extra_batch: Optional[dict] = None) -> jnp.ndarray:
+                 key=None, extra_batch: Optional[dict] = None,
+                 cache_len: Optional[int] = None) -> jnp.ndarray:
         """prompts: (B, P) int32 -> (B, gen) generated ids.
 
-        One prefill trace plus ONE `jax.lax.scan` trace for the whole
-        decode loop (instead of ``gen`` separate dispatches).  ``sampler``
-        is a `SAMPLERS` name; by default greedy at ``temperature <= 0``
-        and categorical above.
+        The trivial one-shot case of the serve subsystem
+        (`repro.serve.oneshot.OneShotGenerator`): one prefill trace plus
+        ONE `jax.lax.scan` trace for the whole decode loop, with the
+        compiled pair cached on the Engine keyed by (shape, cache_len,
+        sampler) — repeated calls with the same signature reuse the
+        executables instead of re-tracing.  ``sampler`` is a `SAMPLERS`
+        name; by default greedy at ``temperature <= 0`` and categorical
+        above.  For request *streams* (continuous batching, paged KV) use
+        `repro.serve.scheduler.Scheduler`.
         """
-        model = self.model
-        if sampler is None:
-            sampler = "greedy" if temperature <= 0.0 else "categorical"
-        sample = SAMPLERS[sampler]
-
-        B, P_len = prompts.shape
-        offset = 0
-        batch = {"tokens": prompts}
-        if extra_batch:
-            batch.update(extra_batch)
-        if model.cfg.vlm is not None and "patches" in batch:
-            offset = batch["patches"].shape[1]
-        cache_len = P_len + offset + gen + 1
-
-        prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_len=cache_len))
-        logits, cache = prefill(params, batch)
-        key = key if key is not None else jax.random.PRNGKey(0)
-        tok0 = sample(logits, key, temperature)
-
-        def body(carry, t):
-            cache, tok, key = carry
-            key, sub = jax.random.split(key)
-            pos = (P_len + offset + t).astype(jnp.int32)
-            step = {"tokens": tok[:, None], "pos": pos}
-            if model.cfg.vlm is not None:
-                step["mrope_positions"] = jnp.full((3, 1), pos, jnp.int32)
-            logits, cache = model.decode_step(params, cache, step)
-            nxt = sample(logits, sub, temperature)
-            return (cache, nxt, key), tok
-
-        decode_loop = jax.jit(lambda p, c, t0, k: jax.lax.scan(
-            body, (c, t0, k), jnp.arange(gen)), donate_argnums=1)
-        _, out = decode_loop(params, cache, tok0, key)
-        return out.T  # (gen, B) -> (B, gen)
+        if self._oneshot is None:
+            self._oneshot = OneShotGenerator(self.model)
+        return self._oneshot(params, prompts, gen=gen, sampler=sampler,
+                             temperature=temperature, key=key,
+                             extra_batch=extra_batch, cache_len=cache_len)
 
 
 # ---------------------------------------------------------------------------

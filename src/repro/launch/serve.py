@@ -1,12 +1,25 @@
-"""Batched serving driver: argument parsing + an `Engine` call.
+"""Serving driver: argument parsing + the `repro.serve` subsystem.
 
-Prefills a batch of prompts, then decodes with a single-trace
-`jax.lax.scan` loop (one compilation for the whole generation instead of
-one dispatch per token); the sampler is pluggable
-(`repro.launch.engine.SAMPLERS`: greedy / categorical).
+Three modes:
+
+* **one-shot** (default) — prefill a fixed batch of equal-length
+  prompts, decode with the single-trace `jax.lax.scan` loop
+  (`repro.serve.oneshot` via `Engine.generate`); the sampler is
+  pluggable (`SAMPLERS`: greedy / categorical);
+* **offline request file** (``--requests file.jsonl``) — continuous
+  batching over the paged KV cache (`repro.serve.scheduler`): each line
+  is a request (``{"prompt": [ids...], "gen": N}`` or synthetic
+  ``{"prompt_len": P, "gen": N}``), admitted into free decode slots as
+  capacity allows, evicted on completion;
+* **synthetic Poisson load** (``--poisson RATE --num-requests N``) —
+  the same scheduler under open-loop arrivals (exponential gaps at
+  RATE req/s), staggered prompt/gen lengths.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --reduced --requests r.jsonl
+  PYTHONPATH=src python -m repro.launch.serve --reduced --poisson 4 \
+      --num-requests 12 --slots 4
 
 To serve weights produced by the training driver, point ``--train-ckpt``
 at a `repro.launch.train` checkpoint: the checkpoint's own
@@ -18,17 +31,20 @@ worker average, paper Eq. 8) become the served weights.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import restore_pytree
 from repro.configs import ARCHS, get_config, reduced
 from repro.core import registry
 from repro.launch.engine import SAMPLERS, Engine, algorithm_for_checkpoint
 from repro.models.transformer import Model
+from repro.serve import Request, Scheduler
 
 
 def generate(model: Model, params, prompts: jnp.ndarray, *, gen: int,
@@ -55,6 +71,66 @@ def params_from_train_ckpt(model: Model, path, *, algo: str, n_workers: int,
     return alg.eval_params(state), resolved
 
 
+def load_requests(path: Path, vocab: int, default_gen: int,
+                  seed: int = 0) -> list:
+    """Parse a JSONL request file.  Lines carry either explicit token ids
+    (``{"prompt": [...]}``)  or a synthetic length (``{"prompt_len": P}``,
+    tokens drawn from a seeded PRNG); ``gen`` defaults per file."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, line in enumerate(Path(path).read_text().splitlines()):
+        line = line.strip()
+        if not line:
+            continue
+        spec = json.loads(line)
+        if "prompt" in spec:
+            prompt = [int(t) for t in spec["prompt"]]
+        else:
+            prompt = rng.integers(0, vocab,
+                                  int(spec["prompt_len"])).tolist()
+        reqs.append(Request(rid=spec.get("id", i), prompt=prompt,
+                            max_new=int(spec.get("gen", default_gen))))
+    return reqs
+
+
+def synthetic_requests(n: int, vocab: int, gen: int, seed: int = 0) -> list:
+    """Staggered synthetic workload: prompt lengths cycle over a few
+    buckets (bounding prefill compilations), gen lengths spread 1..gen."""
+    rng = np.random.default_rng(seed)
+    p_lens = [8, 16, 24, 32]
+    reqs = []
+    for i in range(n):
+        P = p_lens[i % len(p_lens)]
+        g = 1 + int(rng.integers(0, gen))
+        reqs.append(Request(rid=i, prompt=rng.integers(0, vocab, P).tolist(),
+                            max_new=g))
+    return reqs
+
+
+def run_scheduler(model, params, reqs, args, arrivals=None) -> None:
+    sch = Scheduler(model, params, slots=args.slots, pages=args.pages,
+                    page_size=args.page_size,
+                    sampler=args.sampler, temperature=args.temperature,
+                    seed=args.seed, use_kernel=args.paged_kernel,
+                    decode_burst=args.decode_burst)
+    t0 = time.time()
+    done = sch.run(reqs, arrivals=arrivals)
+    wall = time.time() - t0
+    summary = sch.latency_summary()
+    toks = summary["tokens"]
+    print(f"[serve] continuous batching: {len(done)} requests, "
+          f"{toks} tokens in {wall:.1f}s ({toks / wall:.1f} tok/s), "
+          f"slots={args.slots} pages={args.pages}x{args.page_size}")
+    for k in ("p50_token_latency_s", "p95_token_latency_s",
+              "mean_pool_utilization", "mean_internal_fragmentation",
+              "preemptions"):
+        if k in summary:
+            print(f"[serve]   {k} = {summary[k]:.4g}")
+    for req in sorted(done, key=lambda r: r.rid)[:4]:
+        print(f"[serve]   req {req.rid}: prompt={len(req.prompt)} "
+              f"-> {len(req.out)} tokens {req.out[:8]}...")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default="qwen3-0.6b")
@@ -67,6 +143,28 @@ def main(argv=None):
                     help="token sampler (default: greedy at temperature 0, "
                          "categorical above)")
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching modes (repro.serve.scheduler)
+    ap.add_argument("--requests", type=Path, default=None,
+                    help="JSONL request file -> offline continuous "
+                         "batching over the paged KV cache")
+    ap.add_argument("--poisson", type=float, default=None, metavar="RATE",
+                    help="synthetic open-loop load: Poisson arrivals at "
+                         "RATE req/s (with --num-requests)")
+    ap.add_argument("--num-requests", type=int, default=12,
+                    help="request count for --poisson")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (continuous batching)")
+    ap.add_argument("--pages", type=int, default=96,
+                    help="KV page pool size")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="Pallas paged-attention decode kernel (interpret "
+                         "mode on CPU) instead of the XLA gather")
+    ap.add_argument("--decode-burst", type=int, default=4,
+                    help="decode steps scanned per dispatch (multi-step "
+                         "scheduling; admissions/evictions land on burst "
+                         "boundaries)")
     ap.add_argument("--train-ckpt", type=Path, default=None,
                     help="serve eval_params of a training checkpoint "
                          "(metadata selects the algorithm)")
@@ -96,6 +194,21 @@ def main(argv=None):
               f"(algo={resolved['algo']}, eval_params)")
     else:
         params = model.init(key)
+
+    if args.requests is not None:
+        reqs = load_requests(args.requests, cfg.vocab_size, args.gen,
+                             seed=args.seed)
+        run_scheduler(model, params, reqs, args)
+        return
+    if args.poisson is not None:
+        rng = np.random.default_rng(args.seed)
+        reqs = synthetic_requests(args.num_requests, cfg.vocab_size,
+                                  args.gen, seed=args.seed)
+        gaps = rng.exponential(1.0 / max(args.poisson, 1e-6),
+                               len(reqs))
+        arrivals = np.cumsum(gaps).tolist()
+        run_scheduler(model, params, reqs, args, arrivals=arrivals)
+        return
 
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)

@@ -62,6 +62,10 @@ def build_argparser():
     ap.add_argument("--ssp-threshold", type=int, default=4,
                     help="max per-worker step skew for --staleness "
                          "dynamic_ssp")
+    ap.add_argument("--measure-skew", action="store_true",
+                    help="drive the staleness policy from measured "
+                         "wall-clock step times (syncs every step; see "
+                         "Engine.fit) instead of only injected progress")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--batch-per-worker", type=int, default=8)
@@ -158,7 +162,7 @@ def run(args) -> dict:
 
     state, history, wall = engine.fit(
         state, batch_fn, steps=args.steps, start=start,
-        log_every=args.log_every)
+        log_every=args.log_every, measure_skew=args.measure_skew)
 
     if args.ckpt:
         engine.save(args.ckpt, state, step=args.steps)

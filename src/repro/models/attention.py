@@ -169,18 +169,46 @@ def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int, dtype):
     return {"k": z, "v": z}
 
 
+def decode_positions(pos: jnp.ndarray) -> jnp.ndarray:
+    """Positions for RoPE at decode: scalar pos (the dense layout — every
+    row at the same position) broadcasts as (1,); a per-row (B,) vector
+    (the paged/continuous-batching layout) becomes (B, 1)."""
+    return pos[None] if pos.ndim == 0 else pos[:, None]
+
+
+def attend_one(qg: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               valid: jnp.ndarray) -> jnp.ndarray:
+    """One-token GQA attention core.  qg: (B, KV, G, hd); k/v caches:
+    (B, C, KV, hd); valid: (C,) shared or (B, C) per-row mask.  Returns
+    (B, KV, G, hd) f32.  Shared by the dense and paged cache layouts so
+    the two stay bitwise-identical on matched inputs."""
+    hd = qg.shape[-1]
+    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    mask = valid[None] if valid.ndim == 1 else valid
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
+                      preferred_element_type=jnp.float32)
+
+
 def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray, *,
                      rope_theta: float, window: int = 0, qk_norm: bool = False,
                      norm_eps: float = 1e-6,
                      mrope_positions: Optional[jnp.ndarray] = None,
                      mrope_sections: Optional[Tuple[int, int, int]] = None,
-                     cross: bool = False) -> Tuple[jnp.ndarray, dict]:
-    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current position).
+                     cross: bool = False, cache_ops=None
+                     ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 (current position)
+    for the dense layout, or a per-row (B,) vector under a paged layout.
 
     Cache keys are stored post-RoPE.  For ``window > 0`` the cache is a ring
     buffer of size ``window`` (slot = pos % window) — memory O(window), not
     O(sequence).  ``cross=True`` treats the cache as static (whisper
-    cross-attention: k/v precomputed from the encoder)."""
+    cross-attention: k/v precomputed from the encoder).  ``cache_ops``
+    (a `repro.models.cache` layout object) takes over the cache
+    update + attend for the self-attention path — the seam the paged KV
+    layout plugs into; ``None`` is the dense in-place path."""
     B = x.shape[0]
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     if qk_norm:
@@ -189,8 +217,9 @@ def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray
         if mrope_positions is not None:
             q = apply_mrope(q, mrope_positions, rope_theta, mrope_sections)
         else:
-            q = apply_rope(q, pos[None], rope_theta)
+            q = apply_rope(q, decode_positions(pos), rope_theta)
 
+    H, hd = q.shape[2], q.shape[3]
     if not cross:
         k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
         v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
@@ -200,7 +229,14 @@ def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray
             if mrope_positions is not None:
                 k_new = apply_mrope(k_new, mrope_positions, rope_theta, mrope_sections)
             else:
-                k_new = apply_rope(k_new, pos[None], rope_theta)
+                k_new = apply_rope(k_new, decode_positions(pos), rope_theta)
+        KV = k_new.shape[2]
+        qg = q.reshape(B, KV, H // KV, hd)
+        if cache_ops is not None:
+            out, cache = cache_ops.kv_attend(cache, qg, k_new, v_new,
+                                             window=window)
+            out = out.reshape(B, 1, H, hd).astype(x.dtype)
+            return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
         cache_len = cache["k"].shape[1]
         slot = jnp.where(window > 0, pos % cache_len, pos)
         k_cache = jax.lax.dynamic_update_slice(
@@ -212,16 +248,10 @@ def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray
     else:
         k_cache, v_cache = cache["k"], cache["v"]
         valid = jnp.ones((k_cache.shape[1],), dtype=bool)
+        KV = k_cache.shape[2]
+        qg = q.reshape(B, KV, H // KV, hd)
 
-    H, KV, hd = q.shape[2], k_cache.shape[2], q.shape[3]
-    G = H // KV
-    qg = q.reshape(B, KV, G, hd)
-    s = jnp.einsum("bkgh,bckh->bkgc", qg, k_cache,
-                   preferred_element_type=jnp.float32) * (hd ** -0.5)
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgc,bckh->bkgh", p.astype(v_cache.dtype), v_cache,
-                     preferred_element_type=jnp.float32)
+    out = attend_one(qg, k_cache, v_cache, valid)
     out = out.reshape(B, 1, H, hd).astype(x.dtype)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
 
@@ -287,43 +317,65 @@ def init_mla_cache(batch: int, cache_len: int, mla_cfg, dtype):
     }
 
 
-def mla_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray, *,
-               mla_cfg, rope_theta: float, norm_eps: float = 1e-6
-               ) -> Tuple[jnp.ndarray, dict]:
-    """Absorbed-weight MLA decode: scores and values are computed directly in
-    the compressed latent space, so per-step cost is O(S · kv_lora_rank · H)
-    instead of re-expanding the whole cache.  This is the TPU-friendly form —
-    two extra small matmuls per step instead of an S-sized expansion."""
+def mla_attend_one(params: dict, q_nope: jnp.ndarray, q_rope: jnp.ndarray,
+                   ckv: jnp.ndarray, k_rope: jnp.ndarray,
+                   valid: jnp.ndarray, *, mla_cfg, out_dtype) -> jnp.ndarray:
+    """Absorbed-weight MLA attention core for one token.  ckv: (B, C, rank);
+    k_rope: (B, C, rr); valid: (C,) shared or (B, C) per-row.  Returns
+    (B, H, v_head_dim) in ``out_dtype``.  Shared by the dense and paged
+    latent-cache layouts (bitwise on matched inputs)."""
     m = mla_cfg
-    B = x.shape[0]
-    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"], norm_eps)
-    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"])[:, 0]  # (B,H,qk)
-    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
-    q_rope = apply_rope(q_rope[:, None], pos[None], rope_theta)[:, 0]
-
-    ckv_t = rmsnorm(params["kv_norm"], x @ params["w_dkv"], norm_eps)[:, 0]
-    k_rope_t = apply_rope((x @ params["w_kr"])[:, :, None, :], pos[None],
-                          rope_theta)[:, 0, 0]
-
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_t[:, None].astype(cache["ckv"].dtype), (0, pos, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], k_rope_t[:, None].astype(cache["k_rope"].dtype), (0, pos, 0))
-    cache = {"ckv": ckv, "k_rope": k_rope}
-    S = ckv.shape[1]
-    valid = jnp.arange(S) <= pos
-
     # absorb W_uk into the query:  q_lat_h = q_nope @ W_uk^T  (per head)
     q_abs = jnp.einsum("bhk,rhk->bhr", q_nope, params["w_uk"])  # (B,H,ckv_rank)
     s = jnp.einsum("bhr,bsr->bhs", q_abs, ckv, preferred_element_type=jnp.float32)
     s = s + jnp.einsum("bhk,bsk->bhs", q_rope, k_rope,
                        preferred_element_type=jnp.float32)
     s = s * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
-    s = jnp.where(valid[None, None], s, NEG_INF)
+    mask = valid[None] if valid.ndim == 1 else valid
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     # values in latent space, then expand through W_uv
     lat = jnp.einsum("bhs,bsr->bhr", p.astype(ckv.dtype), ckv,
-                     preferred_element_type=jnp.float32).astype(x.dtype)
-    out = jnp.einsum("bhr,rhk->bhk", lat, params["w_uv"])
+                     preferred_element_type=jnp.float32).astype(out_dtype)
+    return jnp.einsum("bhr,rhk->bhk", lat, params["w_uv"])
+
+
+def mla_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray, *,
+               mla_cfg, rope_theta: float, norm_eps: float = 1e-6,
+               cache_ops=None) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed-weight MLA decode: scores and values are computed directly in
+    the compressed latent space, so per-step cost is O(S · kv_lora_rank · H)
+    instead of re-expanding the whole cache.  This is the TPU-friendly form —
+    two extra small matmuls per step instead of an S-sized expansion.
+
+    ``pos`` is scalar for the dense layout, per-row (B,) under a paged
+    layout; ``cache_ops`` takes over the latent-cache update + view."""
+    m = mla_cfg
+    B = x.shape[0]
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"], norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"])[:, 0]  # (B,H,qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], decode_positions(pos),
+                        rope_theta)[:, 0]
+
+    ckv_t = rmsnorm(params["kv_norm"], x @ params["w_dkv"], norm_eps)[:, 0]
+    k_rope_t = apply_rope((x @ params["w_kr"])[:, :, None, :],
+                          decode_positions(pos), rope_theta)[:, 0, 0]
+
+    if cache_ops is not None:
+        ckv, k_rope, valid, cache = cache_ops.mla_update(cache, ckv_t,
+                                                         k_rope_t)
+    else:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_t[:, None].astype(cache["ckv"].dtype),
+            (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_t[:, None].astype(cache["k_rope"].dtype),
+            (0, pos, 0))
+        cache = {"ckv": ckv, "k_rope": k_rope}
+        valid = jnp.arange(ckv.shape[1]) <= pos
+
+    out = mla_attend_one(params, q_nope, q_rope, ckv, k_rope, valid,
+                         mla_cfg=m, out_dtype=x.dtype)
     out = jnp.einsum("bhk,hkd->bd", out, params["wo"])[:, None]
     return out, cache

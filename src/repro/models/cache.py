@@ -1,0 +1,341 @@
+"""Cache layouts: how decode state is stored, addressed, and updated.
+
+`repro.models.transformer.Model` exposes three cache-touching paths
+(``init_cache`` / ``prefill`` / ``decode_step``) whose storage was
+hard-wired to the *dense* layout: one contiguous ``(B, cache_len, ...)``
+buffer per sequence, allocated for the worst case and owned for the
+sequence's whole lifetime.  This module makes the layout a first-class
+object so the serving layer can swap it:
+
+* `DenseLayout` — the original contiguous layout, kept as the
+  bitwise-pinned fallback (`Engine.generate`, the one-shot scan loop,
+  and every existing test run through it unchanged);
+* `PagedLayout` — the vLLM-style paged layout for continuous batching
+  (`repro.serve`): cache kinds that grow with sequence length live in a
+  shared **page pool** addressed through per-slot **block tables**, and
+  fixed-size kinds are **slot-indexed** by decode row.
+
+Per-cache-kind dispatch (the kinds are `transformer.stage_plan` block
+kinds):
+
+=================  ====================================================
+kind               paged storage
+=================  ====================================================
+attention (full)   pool ``(num_pages, page_size, KV, hd)`` per layer
+                   for k and v; logical position ``p`` of slot ``s``
+                   lives at ``(block_table[s, p // page_size],
+                   p % page_size)``
+mla                latent pools ``(num_pages, page_size, kv_lora_rank)``
+                   and ``(num_pages, page_size, qk_rope_head_dim)``
+                   (same block table — the latent cache is per-token)
+attention w>0      slot-indexed ring ``(n_slots, window, KV, hd)`` —
+(sliding/local)    already O(window), nothing to page
+mamba / recurrent  slot-indexed O(1) state ``(n_slots, ...)`` — the
+                   state *is* fixed-size; pages would add indirection
+                   for nothing
+cross (whisper)    self part paged; encoder k/v slot-indexed static
+=================  ====================================================
+
+The decode math itself stays in `repro.models.attention`; the layout
+only owns *update + view* (`_PagedOps.kv_attend` / ``mla_update``), so
+the paged linearized view feeds the exact same `attend_one` /
+`mla_attend_one` ops as the dense path — with matched linearized cache
+lengths the two are bitwise identical (pinned by ``tests/test_serve``).
+``use_kernel=True`` dispatches full-attention gathers to the Pallas
+`repro.kernels.paged_attention` kernel instead of materializing the
+``(B, max_pages·page_size, KV, hd)`` gather.
+
+Physical page 0 is reserved as the **scratch page**: inactive decode
+slots point their whole block table at it (and sit at position 0), so
+their writes land somewhere harmless and no per-slot active mask is
+needed inside the jitted step.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+
+PyTree = Any
+
+SCRATCH_PAGE = 0  # physical page inactive slots write into; never read
+
+
+def resolved_window(cfg: ModelConfig, kind: str) -> int:
+    """The sliding window a block kind attends with (0 = full causal)."""
+    if kind == "attention_local":
+        return cfg.rglru.attention_window
+    if kind in ("attention", "cross"):
+        return cfg.sliding_window
+    return 0
+
+
+def paged_kinds(cfg: ModelConfig, kinds) -> List[str]:
+    """The block kinds of one stage unit whose cache grows with sequence
+    length (and therefore lives in the page pool)."""
+    return [k for k in kinds
+            if k in ("attention", "cross", "mla")
+            and (k == "mla" or resolved_window(cfg, k) == 0)]
+
+
+# ---------------------------------------------------------------------------
+# dense layout — the bitwise-pinned fallback
+# ---------------------------------------------------------------------------
+
+
+class DenseLayout:
+    """The original contiguous per-sequence layout.  Thin delegation: the
+    Model's own dense paths ARE this layout; the class exists so call
+    sites select layouts uniformly."""
+
+    kind = "dense"
+
+    def __init__(self, model):
+        self.model = model
+
+    def init_cache(self, batch: int, cache_len: int, dtype=None) -> PyTree:
+        return self.model.init_cache(batch, cache_len, dtype)
+
+    def prefill(self, params, batch, *, cache_len: int):
+        return self.model.prefill(params, batch, cache_len=cache_len)
+
+    def decode_step(self, params, cache, batch):
+        return self.model.decode_step(params, cache, batch)
+
+
+# ---------------------------------------------------------------------------
+# paged layout
+# ---------------------------------------------------------------------------
+
+
+class _PagedOps:
+    """The jit-time cache ops handed to `Model.decode_step` for one paged
+    decode step: per-row positions + block tables, page-pool scatter on
+    write, block-table gather (or the Pallas kernel) on read."""
+
+    def __init__(self, layout: "PagedLayout", pos: jnp.ndarray,
+                 block_tables: jnp.ndarray):
+        self.layout = layout
+        self.pos = pos                   # (B,) int32
+        self.bt = block_tables           # (B, max_pages) int32
+
+    # -- full attention / sliding-window ring -------------------------------
+
+    def kv_attend(self, cache: dict, qg, k_new, v_new, *, window: int
+                  ) -> Tuple[jnp.ndarray, dict]:
+        from repro.models.attention import attend_one
+        pos = self.pos
+        B = qg.shape[0]
+        rows = jnp.arange(B)
+        if window > 0:
+            # slot-indexed ring: per-row slot = pos % window
+            rw = cache["k"].shape[1]
+            slot = pos % rw
+            k_c = cache["k"].at[rows, slot].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            v_c = cache["v"].at[rows, slot].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+            valid = jnp.arange(rw)[None, :] <= pos[:, None]
+            return attend_one(qg, k_c, v_c, valid), {"k": k_c, "v": v_c}
+        ps = self.layout.page_size
+        phys, off = self.bt[rows, pos // ps], pos % ps
+        k_p = cache["k"].at[phys, off].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        v_p = cache["v"].at[phys, off].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": k_p, "v": v_p}
+        if self.layout.use_kernel:
+            from repro.kernels.paged_attention import paged_attention
+            out = paged_attention(qg, k_p, v_p, self.bt, pos + 1)
+            return out, new_cache
+        k_lin, valid = self._linearize(k_p)
+        v_lin, _ = self._linearize(v_p)
+        return attend_one(qg, k_lin, v_lin, valid), new_cache
+
+    # -- MLA latent ---------------------------------------------------------
+
+    def mla_update(self, cache: dict, ckv_t, k_rope_t):
+        pos = self.pos
+        rows = jnp.arange(ckv_t.shape[0])
+        ps = self.layout.page_size
+        phys, off = self.bt[rows, pos // ps], pos % ps
+        ckv_p = cache["ckv"].at[phys, off].set(
+            ckv_t.astype(cache["ckv"].dtype))
+        kr_p = cache["k_rope"].at[phys, off].set(
+            k_rope_t.astype(cache["k_rope"].dtype))
+        ckv, valid = self._linearize(ckv_p)
+        kr, _ = self._linearize(kr_p)
+        return ckv, kr, valid, {"ckv": ckv_p, "k_rope": kr_p}
+
+    def _linearize(self, pool: jnp.ndarray):
+        """Gather a slot's pages into logical order: (B, max_pages ·
+        page_size, ...) — the paged view of the dense cache."""
+        B, mp = self.bt.shape
+        ps = self.layout.page_size
+        lin = pool[self.bt].reshape(B, mp * ps, *pool.shape[2:])
+        valid = jnp.arange(mp * ps)[None, :] <= self.pos[:, None]
+        return lin, valid
+
+
+class PagedLayout:
+    """Paged KV cache + slot-indexed fixed states for continuous batching.
+
+    ``n_slots`` — decode batch rows (one active request per slot);
+    ``num_pages`` × ``page_size`` — the shared pool (page 0 = scratch);
+    ``max_pages`` — block-table width = max sequence pages per slot.
+    """
+
+    kind = "paged"
+
+    def __init__(self, model, *, n_slots: int, num_pages: int,
+                 page_size: int, max_pages: int, use_kernel: bool = False):
+        self.model = model
+        self.n_slots = int(n_slots)
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.max_pages = int(max_pages)
+        self.use_kernel = bool(use_kernel)
+        cfg = model.cfg
+        self.ring_max = max([resolved_window(cfg, k)
+                             for st in model.stages for k in st.kinds]
+                            + [0])
+        self.uses_pages = any(paged_kinds(cfg, st.kinds)
+                              for st in model.stages)
+
+    # -- allocation-free capacity facts ------------------------------------
+
+    @property
+    def max_len(self) -> int:
+        """Longest sequence one block table can address."""
+        return self.max_pages * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions."""
+        return -(-max(int(n_tokens), 1) // self.page_size) \
+            if self.uses_pages else 0
+
+    # -- cache init ---------------------------------------------------------
+
+    def init_cache(self, dtype=None) -> PyTree:
+        dtype = dtype or self.model.compute_dtype
+        caches = []
+        for stage in self.model.stages:
+            unit = {f"b{j}": self._init_block(kind, dtype)
+                    for j, kind in enumerate(stage.kinds)}
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (stage.repeats,) + a.shape),
+                unit))
+        return caches
+
+    def _init_block(self, kind: str, dtype) -> dict:
+        from repro.models import attention as attn
+        from repro.models import rglru as rglru_mod
+        from repro.models import ssm as ssm_mod
+        cfg = self.model.cfg
+        window = resolved_window(cfg, kind)
+        if kind in ("attention", "attention_local", "cross"):
+            kv, hd = cfg.eff_n_kv_heads, cfg.resolved_head_dim
+            if window > 0:  # slot-indexed ring — O(window), not paged
+                c = attn.init_kv_cache(self.n_slots, window, kv, hd, dtype)
+            else:
+                z = jnp.zeros((self.num_pages, self.page_size, kv, hd), dtype)
+                c = {"k": z, "v": z}
+            if kind == "cross":
+                nf = cfg.encoder.n_frames
+                c["xk"] = jnp.zeros((self.n_slots, nf, cfg.eff_n_heads,
+                                     cfg.resolved_head_dim), dtype)
+                c["xv"] = jnp.zeros_like(c["xk"])
+            return c
+        if kind == "mla":
+            m = cfg.mla
+            return {
+                "ckv": jnp.zeros((self.num_pages, self.page_size,
+                                  m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((self.num_pages, self.page_size,
+                                     m.qk_rope_head_dim), dtype),
+            }
+        if kind == "mamba":
+            return ssm_mod.init_mamba_state(self.n_slots, cfg.d_model,
+                                            cfg.ssm, dtype)
+        if kind == "recurrent":
+            return rglru_mod.init_rglru_state(self.n_slots, cfg.d_model,
+                                              cfg.rglru, dtype)
+        raise ValueError(kind)
+
+    # -- prefill-on-join ----------------------------------------------------
+
+    def prefill_into(self, params, cache: PyTree, batch: dict,
+                     pages: jnp.ndarray, slots: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, PyTree]:
+        """Prefill a GROUP of joining requests (equal prompt lengths —
+        batch rows = len(slots)) and scatter their caches into ``pages``
+        ((k, n_pg) physical page ids covering each prompt) and slot rows
+        ``slots`` ((k,)).  Pure and jit-friendly; the jit key is
+        (prompt length, pages per request, group size).
+
+        Reuses `Model.prefill` verbatim for the prompt math — the dense
+        cache entries it emits are the *logical* layout, scattered here
+        into the pool/slot storage — so a paged prefill is bitwise the
+        dense prefill at the same batch width."""
+        P = batch["tokens"].shape[1]
+        n_pg = int(pages.shape[1])
+        cache_len = max(n_pg * self.page_size, self.ring_max, P, 1)
+        logits, entries = self.model.prefill(params, batch,
+                                             cache_len=cache_len)
+        new = []
+        for si, stage in enumerate(self.model.stages):
+            unit = {}
+            for j, kind in enumerate(stage.kinds):
+                unit[f"b{j}"] = self._write_block(
+                    kind, cache[si][f"b{j}"], entries[si][f"b{j}"],
+                    pages, slots)
+            new.append(unit)
+        return logits, new
+
+    def _write_block(self, kind: str, c: dict, e: dict, pages, slots
+                     ) -> dict:
+        cfg = self.model.cfg
+        window = resolved_window(cfg, kind)
+        ps = self.page_size
+        k_grp, n_pg = pages.shape
+
+        def to_pool(pool, seq):  # seq: (R, k, cache_len, ...)
+            seg = seq[:, :, :n_pg * ps]
+            seg = seg.reshape(seq.shape[0], k_grp * n_pg, ps,
+                              *seq.shape[3:])
+            return pool.at[:, pages.reshape(-1)].set(seg.astype(pool.dtype))
+
+        def to_slot(buf, seq):   # seq: (R, k, ...)
+            return buf.at[:, slots].set(seq.astype(buf.dtype))
+
+        if kind in ("attention", "attention_local", "cross"):
+            wr = to_slot if window > 0 else to_pool
+            out = {"k": wr(c["k"], e["k"]), "v": wr(c["v"], e["v"])}
+            if kind == "cross":
+                out["xk"] = to_slot(c["xk"], e["xk"])
+                out["xv"] = to_slot(c["xv"], e["xv"])
+            return out
+        if kind == "mla":
+            return {"ckv": to_pool(c["ckv"], e["ckv"]),
+                    "k_rope": to_pool(c["k_rope"], e["k_rope"])}
+        if kind in ("mamba", "recurrent"):
+            return {k: to_slot(c[k], e[k]) for k in c}
+        raise ValueError(kind)
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_step(self, params, cache: PyTree, tokens: jnp.ndarray,
+                    pos: jnp.ndarray, block_tables: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, PyTree]:
+        """One continuous-batching decode step: ``tokens`` (B, 1),
+        ``pos`` (B,) per-slot positions, ``block_tables`` (B, max_pages).
+        Returns ((B, vocab) logits, new cache)."""
+        batch = {"tokens": tokens, "pos": pos}
+        if self.model.cfg.vlm is not None:
+            batch["mrope_positions"] = jnp.broadcast_to(
+                pos[None, :, None], (3,) + pos.shape + (1,)).astype(jnp.int32)
+        ops = _PagedOps(self, pos, block_tables)
+        return self.model.decode_step(params, cache, batch, cache_ops=ops)

@@ -302,6 +302,7 @@ def _rglru_with_state(p, h, rcfg, ctx):
 
 def _decode_block(kind: str, cfg: ModelConfig, p: dict, cache: dict, x, ctx):
     pos = ctx["pos"]
+    cache_ops = ctx.get("cache_ops")
     window = cfg.sliding_window
     if kind == "attention_local":
         window = cfg.rglru.attention_window
@@ -312,7 +313,8 @@ def _decode_block(kind: str, cfg: ModelConfig, p: dict, cache: dict, x, ctx):
             rope_theta=cfg.rope_theta, window=window, qk_norm=cfg.qk_norm,
             norm_eps=cfg.norm_eps,
             mrope_positions=ctx.get("mrope_positions"),
-            mrope_sections=cfg.vlm.mrope_sections if cfg.vlm else None)
+            mrope_sections=cfg.vlm.mrope_sections if cfg.vlm else None,
+            cache_ops=cache_ops)
         x = x + h
         new_cache = dict(cache, **new_self)
         if kind == "cross":
@@ -336,7 +338,8 @@ def _decode_block(kind: str, cfg: ModelConfig, p: dict, cache: dict, x, ctx):
         h = _norm(cfg, p["ln1"], x)
         h, new_cache = attn.mla_decode(p["attn"], cache, h, pos, mla_cfg=cfg.mla,
                                        rope_theta=cfg.rope_theta,
-                                       norm_eps=cfg.norm_eps)
+                                       norm_eps=cfg.norm_eps,
+                                       cache_ops=cache_ops)
         x = x + h
         h = _norm(cfg, p["ln2"], x)
         x = x + mlp(p["mlp"], h, cfg.activation)
@@ -598,9 +601,15 @@ class Model:
         logits = (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), caches
 
-    def decode_step(self, params, caches, batch) -> Tuple[jnp.ndarray, PyTree]:
+    def decode_step(self, params, caches, batch, *,
+                    cache_ops=None) -> Tuple[jnp.ndarray, PyTree]:
         """batch: {'tokens': (B,1), 'pos': scalar int32, [mrope/frames aux]}.
-        Returns ((B, vocab) logits, new caches)."""
+        Returns ((B, vocab) logits, new caches).
+
+        ``cache_ops`` (a `repro.models.cache` layout object) reroutes the
+        attention/MLA cache update + attend — the paged-KV seam.  With a
+        layout, ``batch['pos']`` may be a per-row (B,) vector (continuous
+        batching: every slot at its own position)."""
         cfg = self.cfg
         x = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
         x = x.astype(self.compute_dtype)
@@ -609,10 +618,16 @@ class Model:
             d = cfg.d_model
             dim = jnp.arange(d // 2, dtype=jnp.float32)
             inv = jnp.exp(-_math.log(10000.0) * dim / max(d // 2 - 1, 1))
-            ang = batch["pos"].astype(jnp.float32) * inv
-            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
-            x = x + pe.astype(x.dtype)[None, None]
-        ctx = {"pos": batch["pos"], "moe_dense": self.moe_dense}
+            if batch["pos"].ndim:  # per-row positions (paged layout)
+                ang = batch["pos"].astype(jnp.float32)[:, None] * inv[None]
+                pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+                x = x + pe.astype(x.dtype)[:, None]
+            else:
+                ang = batch["pos"].astype(jnp.float32) * inv
+                pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+                x = x + pe.astype(x.dtype)[None, None]
+        ctx = {"pos": batch["pos"], "moe_dense": self.moe_dense,
+               "cache_ops": cache_ops}
         if cfg.vlm is not None and "mrope_positions" in batch:
             ctx["mrope_positions"] = batch["mrope_positions"]
         new_caches = []

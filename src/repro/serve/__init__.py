@@ -1,0 +1,20 @@
+"""The serving subsystem: paged KV cache + continuous batching.
+
+Carved out of `repro.launch.engine.Engine` (PR 5):
+
+* `repro.serve.pool`      — the page allocator (`PagePool`);
+* `repro.serve.scheduler` — the continuous-batching request scheduler
+  (`Scheduler` / `Request`) over `repro.models.cache.PagedLayout`;
+* `repro.serve.oneshot`   — the fixed-batch scan-loop generator
+  (`OneShotGenerator`, the trivial one-request-set case) plus the
+  pluggable `SAMPLERS`; `Engine.generate` delegates here.
+
+See ``docs/serve.md`` for the cache-layout / block-table contract, the
+scheduler lifecycle, and the bench schema.
+"""
+from repro.serve.oneshot import SAMPLERS, OneShotGenerator
+from repro.serve.pool import PagePool
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["SAMPLERS", "OneShotGenerator", "PagePool", "Request",
+           "Scheduler"]

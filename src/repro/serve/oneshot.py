@@ -1,0 +1,135 @@
+"""Fixed-batch one-shot generation — the trivial case of the serve path.
+
+This is `Engine.generate`'s engine room, carved out of the launch layer:
+one prefill trace plus ONE ``jax.lax.scan`` trace for the whole decode
+loop (the dense `repro.models.cache.DenseLayout` — every request starts
+together, pads to the longest prompt, and runs the same number of
+steps).  The continuous-batching path for request streams is
+`repro.serve.scheduler`.
+
+Compiled functions are **cached on the generator** keyed by
+(batch, prompt length, gen, cache_len, sampler, temperature, extras):
+the launch layer used to rebuild ``jax.jit(lambda ...)`` closures inside
+every ``generate()`` call, so repeated serve calls with identical shapes
+recompiled prefill + decode from scratch each time.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pluggable samplers for the decode loops (one-shot scan AND scheduler)
+# ---------------------------------------------------------------------------
+
+
+def _greedy(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    del key, temperature
+    return jnp.argmax(logits, axis=-1)
+
+
+def _categorical(logits: jnp.ndarray, key, temperature: float) -> jnp.ndarray:
+    t = max(float(temperature), 1e-6)
+    return jax.random.categorical(key, logits / t, axis=-1)
+
+
+SAMPLERS: Dict[str, Callable] = {"greedy": _greedy,
+                                 "categorical": _categorical}
+
+
+def resolve_sampler(sampler: Optional[str], temperature: float) -> str:
+    """Default: greedy at ``temperature <= 0``, categorical above."""
+    if sampler is None:
+        return "greedy" if temperature <= 0.0 else "categorical"
+    return sampler
+
+
+class OneShotGenerator:
+    """Compile-once scan-based generate over the dense cache layout."""
+
+    def __init__(self, model):
+        self.model = model
+        self._compiled: Dict[tuple, Tuple[Callable, Callable]] = {}
+
+    @property
+    def cache_size(self) -> int:
+        """Compiled (prefill, decode-loop) pairs held (test seam)."""
+        return len(self._compiled)
+
+    def _extras_sig(self, extra_batch: Optional[dict]) -> tuple:
+        if not extra_batch:
+            return ()
+        return tuple(sorted((k, tuple(v.shape), jnp.dtype(v.dtype).name)
+                            for k, v in extra_batch.items()))
+
+    def _build(self, *, P_len: int, offset: int, gen: int, cache_len: int,
+               sampler: str, temperature: float
+               ) -> Tuple[Callable, Callable]:
+        model = self.model
+        sample = SAMPLERS[sampler]
+
+        prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+
+        # params are a real traced argument of the compiled loop (the old
+        # per-call closure baked them in as constants — harmless when the
+        # jit was rebuilt every call, wrong once the executable is cached)
+        def decode_loop(p, c, t0, k):
+            def body(carry, t):
+                cache, tok, key = carry
+                key, sub = jax.random.split(key)
+                pos = (P_len + offset + t).astype(jnp.int32)
+                step = {"tokens": tok[:, None], "pos": pos}
+                if model.cfg.vlm is not None:
+                    step["mrope_positions"] = jnp.full((3, 1), pos,
+                                                       jnp.int32)
+                logits, cache = model.decode_step(p, cache, step)
+                nxt = sample(logits, sub, temperature)
+                return (cache, nxt, key), tok
+
+            return jax.lax.scan(body, (c, t0, k), jnp.arange(gen))
+
+        return prefill, jax.jit(decode_loop, donate_argnums=1)
+
+    def __call__(self, params: PyTree, prompts: jnp.ndarray, *, gen: int,
+                 sampler: Optional[str] = None, temperature: float = 0.0,
+                 key=None, extra_batch: Optional[dict] = None,
+                 cache_len: Optional[int] = None) -> jnp.ndarray:
+        """prompts: (B, P) int32 -> (B, gen) generated ids.
+
+        ``cache_len`` (>= P + offset + gen + 1) overrides the cache
+        allocation — semantics don't depend on it (positions beyond the
+        current one are masked); parity tests use it to match the paged
+        layout's page-aligned linearized length bitwise."""
+        model = self.model
+        sampler = resolve_sampler(sampler, temperature)
+
+        B, P_len = prompts.shape
+        offset = 0
+        batch = {"tokens": prompts}
+        if extra_batch:
+            batch.update(extra_batch)
+        if model.cfg.vlm is not None and "patches" in batch:
+            offset = batch["patches"].shape[1]
+        need = P_len + offset + gen + 1
+        cache_len = need if cache_len is None else cache_len
+        assert cache_len >= need, (cache_len, need)
+
+        sig = (B, P_len, offset, gen, cache_len, sampler,
+               float(temperature), self._extras_sig(extra_batch))
+        if sig not in self._compiled:
+            self._compiled[sig] = self._build(
+                P_len=P_len, offset=offset, gen=gen, cache_len=cache_len,
+                sampler=sampler, temperature=temperature)
+        prefill, decode_loop = self._compiled[sig]
+
+        logits, cache = prefill(params, batch)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tok0 = SAMPLERS[sampler](logits, key, temperature)
+        _, out = decode_loop(params, cache, tok0, key)
+        return out.T  # (gen, B) -> (B, gen)

@@ -1,0 +1,87 @@
+"""The page allocator behind the paged KV cache.
+
+Host-side and deliberately dumb: pages are interchangeable fixed-size
+units of the device pool (`repro.models.cache.PagedLayout`), so
+allocation is a free list — O(1) alloc/free, no compaction, no
+copying.  The only waste a paged cache can have is **internal**
+fragmentation (the unused tail of each sequence's last page, bounded by
+``page_size - 1`` tokens per sequence); external fragmentation cannot
+exist because any free page satisfies any request.
+
+Page ids below ``reserved`` (default 1) are never handed out — physical
+page 0 is the scratch page inactive decode slots write into
+(`repro.models.cache.SCRATCH_PAGE`).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+
+class PagePool:
+    """Free-list allocator over ``num_pages`` pages of ``page_size``
+    token slots each."""
+
+    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1):
+        if num_pages <= reserved:
+            raise ValueError(f"pool needs > {reserved} pages, got {num_pages}")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.reserved = int(reserved)
+        # LIFO free list: recently freed pages are reused first (their
+        # pool rows are warm)
+        self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
+        self._used: set = set()
+
+    # -- alloc / free -------------------------------------------------------
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """``n`` pages, or None if the pool can't satisfy the request
+        (callers keep the request waiting — never a partial grant)."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    @property
+    def capacity_tokens(self) -> int:
+        """Token slots the usable (non-reserved) pool holds."""
+        return (self.num_pages - self.reserved) * self.page_size
+
+    def stats(self, used_tokens: Optional[int] = None) -> Dict[str, float]:
+        """Occupancy snapshot.  ``used_tokens`` (the live cache positions,
+        known to the scheduler) adds the internal-fragmentation rate:
+        the fraction of *allocated* slots holding no token."""
+        out = {
+            "num_pages": self.num_pages,
+            "page_size": self.page_size,
+            "free_pages": self.free_pages,
+            "used_pages": self.used_pages,
+            "utilization": self.used_pages / max(self.num_pages
+                                                 - self.reserved, 1),
+        }
+        if used_tokens is not None:
+            alloc_tokens = self.used_pages * self.page_size
+            out["used_tokens"] = int(used_tokens)
+            out["internal_fragmentation"] = (
+                1.0 - used_tokens / alloc_tokens if alloc_tokens else 0.0)
+        return out

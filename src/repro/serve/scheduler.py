@@ -1,0 +1,403 @@
+"""Continuous-batching request scheduler over the paged KV cache.
+
+The fixed-batch loop (`repro.serve.oneshot`) has the utilization failure
+the ROADMAP's serve item names: every request pads to the longest
+prompt, owns a worst-case dense cache for its whole lifetime, and the
+batch stalls until the slowest sequence finishes.  This scheduler is the
+decode-side analogue of the paper's overlap-and-compensate philosophy —
+never let a fast lane wait on a slow one:
+
+* the decode batch is ``n_slots`` persistent **slots** stepped by ONE
+  jitted function, compiled once (shapes never change: per-slot
+  positions and block tables are data, not shapes);
+* each step first **admits** waiting requests into free slots (prefill
+  on join — one jitted prefill per (prompt-length, pages) signature,
+  scattered into freshly allocated pages / the slot row);
+* sequences **grow** a page at a time (`PagePool.alloc`) exactly when
+  their position crosses a page boundary, and are **evicted** on EOS or
+  ``max_new``, returning their pages immediately;
+* when the pool can't grow a sequence, the youngest active request is
+  **preempted** (pages freed, re-queued front with its generated prefix
+  as the new prompt — recompute-style, no cache swap);
+* inactive slots aren't masked inside the jitted step: their block
+  tables point at the reserved scratch page and the host ignores their
+  samples (`repro.models.cache.SCRATCH_PAGE`);
+* ``decode_burst > 1`` scans that many decode steps inside ONE dispatch
+  (multi-step scheduling): per-token host overhead drops by the burst
+  factor, at the cost of admissions/evictions landing only on burst
+  boundaries (a finished lane idles at most ``burst - 1`` steps — still
+  bounded, unlike the dense loop's ``gen_max - gen_i``).  Each slot's
+  token sequence is unchanged (the burst is the same per-step math,
+  host-invisible in between).
+
+Under greedy sampling each slot's trajectory is bitwise the dense
+layout's (same batch width, matched linearized cache length) — pinned by
+``tests/test_serve.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import SCRATCH_PAGE, PagedLayout
+from repro.serve.oneshot import SAMPLERS, resolve_sampler
+from repro.serve.pool import PagePool
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt`` is token ids; the generated
+    ids (the prefill sample included, matching `OneShotGenerator`)
+    accumulate in ``out``."""
+
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    # lifecycle timestamps + per-token completion times (wall, seconds)
+    t_submit: Optional[float] = None
+    t_join: Optional[float] = None
+    t_done: Optional[float] = None
+    token_walls: List[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
+
+    @property
+    def resume_tokens(self) -> List[int]:
+        """Prompt for (re-)admission: original prompt plus whatever was
+        generated before a preemption (recompute-style resume)."""
+        return list(self.prompt) + list(self.out)
+
+    @property
+    def done(self) -> bool:
+        return self.t_done is not None
+
+
+class Scheduler:
+    """Drives a `PagedLayout` decode step over a request stream."""
+
+    def __init__(self, model, params, *, slots: int = 8, pages: int = 64,
+                 page_size: int = 16, max_len: Optional[int] = None,
+                 sampler: Optional[str] = None, temperature: float = 0.0,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 use_kernel: bool = False, donate: bool = True,
+                 decode_burst: int = 1):
+        self.model = model
+        self.params = params
+        self.sampler = resolve_sampler(sampler, temperature)
+        self.temperature = float(temperature)
+        self.eos_id = eos_id
+        self.decode_burst = max(int(decode_burst), 1)
+        if model.cfg.encoder is not None or model.cfg.vlm is not None:
+            # the paged LAYOUT stores their caches fine, but a Request
+            # carries token ids only — no seam yet for per-request
+            # encoder frames / vision patches at prefill
+            raise NotImplementedError(
+                "continuous batching serves text-only requests; "
+                "encoder-decoder / VLM archs need per-request encoder "
+                "inputs — use the one-shot Engine.generate path")
+        max_len = int(max_len) if max_len is not None \
+            else (pages - 1) * page_size
+        max_pages = -(-max_len // page_size)
+        if max_pages > pages - 1:
+            raise ValueError(
+                f"max_len {max_len} needs {max_pages} pages but the pool "
+                f"has {pages - 1} usable — a full-length request could "
+                f"never be admitted")
+        self.layout = PagedLayout(model, n_slots=slots, num_pages=pages,
+                                  page_size=page_size, max_pages=max_pages,
+                                  use_kernel=use_kernel)
+        self.pool = PagePool(pages, page_size, reserved=1)
+        self.cache = self.layout.init_cache()
+        self.slots: List[Optional[Request]] = [None] * slots
+        self.waiting: Deque[Request] = deque()
+        self.block_tables = np.full((slots, max_pages), SCRATCH_PAGE,
+                                    np.int32)
+        self.pos = np.zeros((slots,), np.int32)
+        self.next_tok = np.zeros((slots,), np.int32)
+        self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
+        self._join_order: List[int] = []      # active slots, oldest first
+        self._key = jax.random.PRNGKey(seed)
+        self._donate = donate
+        self._prefill_fn = None
+        self._decode_fns: Dict[int, Any] = {}
+        self.finished: List[Request] = []
+        self.stats: Dict[str, Any] = {
+            "decode_steps": 0, "prefills": 0, "preemptions": 0,
+            "tokens": 0, "step_walls": [], "occupancy": [],
+        }
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new + 1
+        if self.layout.uses_pages and need > self.layout.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new+1 = {need} exceeds "
+                f"max_len {self.layout.max_len} (block-table width)")
+        if req.t_submit is None:
+            req.t_submit = time.time()
+        self.waiting.append(req)
+
+    # -- compiled steps -----------------------------------------------------
+
+    def _prefill(self):
+        """The jitted group prefill.  ONE jit wrapper — jax already
+        caches compilations per (prompt length, pages, group) shape."""
+        if self._prefill_fn is None:
+            lay = self.layout
+            self._prefill_fn = jax.jit(
+                lambda params, cache, toks, pages, slots: lay.prefill_into(
+                    params, cache, {"tokens": toks}, pages, slots),
+                donate_argnums=1 if self._donate else ())
+        return self._prefill_fn
+
+    def _decode(self, burst: int):
+        """The compiled decode burst: ``burst`` scan steps in one
+        dispatch.  Returns (tokens (burst, B), new cache).  One
+        executable per burst length (at most ``decode_burst`` of them)."""
+        if burst not in self._decode_fns:
+            lay = self.layout
+            sample = SAMPLERS[self.sampler]
+            temp = self.temperature
+
+            def fn(params, cache, tok0, pos0, bt, key):
+                def body(carry, _):
+                    cache, tok, pos, key = carry
+                    key, sub = jax.random.split(key)
+                    logits, cache = lay.decode_step(params, cache,
+                                                    tok[:, None], pos, bt)
+                    nt = sample(logits, sub, temp).astype(jnp.int32)
+                    return (cache, nt, pos + 1, key), nt
+
+                (cache, _, _, _), toks = jax.lax.scan(
+                    body, (cache, tok0, pos0, key), None, length=burst)
+                return toks, cache
+
+            self._decode_fns[burst] = jax.jit(
+                fn, donate_argnums=1 if self._donate else ())
+        return self._decode_fns[burst]
+
+    # -- slot lifecycle -----------------------------------------------------
+
+    def _finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        req.t_done = time.time()
+        self.finished.append(req)
+        self._release(slot)
+
+    def _release(self, slot: int) -> None:
+        if self._slot_pages[slot]:
+            self.pool.free(self._slot_pages[slot])
+        self._slot_pages[slot] = []
+        self.slots[slot] = None
+        self.block_tables[slot, :] = SCRATCH_PAGE
+        self.pos[slot] = 0
+        self.next_tok[slot] = 0
+        self._join_order.remove(slot)
+
+    def _preempt_youngest(self) -> bool:
+        """Free the most recently joined request (recompute-resume later).
+        Returns False when nothing is active (nothing to preempt)."""
+        if not self._join_order:
+            return False
+        slot = self._join_order[-1]
+        req = self.slots[slot]
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self._release(slot)
+        self.waiting.appendleft(req)
+        return True
+
+    def _admit(self) -> None:
+        """Admit waiting requests into free slots.  A FIFO prefix sharing
+        one prompt length joins as a GROUP — one batched prefill dispatch
+        instead of one per request (and bitwise the dense fixed-batch
+        prefill when a whole batch joins together)."""
+        while self.waiting and None in self.slots:
+            p_len = len(self.waiting[0].resume_tokens)
+            n_pg = self.layout.pages_for(p_len)
+            group = []          # [(req, slot, pages)]
+            starved = False
+            while (self.waiting and None in self.slots
+                   and len(self.waiting[0].resume_tokens) == p_len):
+                pages = self.pool.alloc(n_pg)
+                if pages is None:
+                    starved = True
+                    break
+                req = self.waiting.popleft()
+                slot = self.slots.index(None)
+                self.slots[slot] = req   # reserve the slot for the group
+                group.append((req, slot, pages))
+            if not group:
+                break  # no memory even for the first request
+            fn = self._prefill()
+            self._key, sub = jax.random.split(self._key)
+            logits, self.cache = fn(
+                self.params, self.cache,
+                jnp.asarray(np.stack([np.asarray(r.resume_tokens, np.int32)
+                                      for r, _, _ in group])),
+                jnp.asarray(np.asarray([p for _, _, p in group], np.int32)
+                            .reshape(len(group), n_pg)),
+                jnp.asarray(np.asarray([s for _, s, _ in group], np.int32)))
+            toks = np.asarray(SAMPLERS[self.sampler](logits, sub,
+                                                     self.temperature))
+            now = time.time()
+            self.stats["prefills"] += 1
+            for (req, slot, pages), tok in zip(group, toks):
+                tok = int(tok)
+                self._slot_pages[slot] = pages
+                self._join_order.append(slot)
+                self.block_tables[slot, :] = SCRATCH_PAGE
+                self.block_tables[slot, :n_pg] = pages
+                self.pos[slot] = p_len
+                self.next_tok[slot] = tok
+                if req.t_join is None:
+                    req.t_join = now
+                req.out.append(tok)
+                req.token_walls.append(now)
+                self.stats["tokens"] += 1
+                if self._is_finished(req, tok):
+                    self._finish(slot)
+            if starved:
+                break
+
+    def _is_finished(self, req: Request, tok: int) -> bool:
+        return len(req.out) >= req.max_new or \
+            (self.eos_id is not None and tok == self.eos_id)
+
+    def _grow(self, burst: int) -> None:
+        """Make sure every active slot has pages for the whole coming
+        burst's write positions; preempt the youngest request when the
+        pool is dry."""
+        if not self.layout.uses_pages:
+            return
+        for slot in list(self._join_order):
+            if self.slots[slot] is None:
+                continue
+            last_write = int(self.pos[slot]) + burst - 1
+            need = min(last_write, self.layout.max_len - 1) \
+                // self.layout.page_size
+            while need >= len(self._slot_pages[slot]):
+                got = self.pool.alloc(1)
+                if got is None:
+                    victim = self._join_order[-1]
+                    if victim == slot:
+                        # can't shrink below myself: preempt myself
+                        self._preempt_youngest()
+                        break
+                    self._preempt_youngest()
+                    continue
+                idx = len(self._slot_pages[slot])
+                self._slot_pages[slot].append(got[0])
+                self.block_tables[slot, idx] = got[0]
+
+    # -- the step -----------------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit, grow, decode one burst (``decode_burst`` tokens) for
+        every active slot.  Returns False when there is nothing to do
+        (idle)."""
+        self._admit()
+        active = [s for s in range(len(self.slots))
+                  if self.slots[s] is not None]
+        if not active:
+            return False
+        # adaptive burst: never scan past the earliest ``max_new`` finish
+        # (the freed slot re-admits immediately instead of idling out the
+        # burst); EOS finishes can't be predicted and idle at most
+        # ``burst - 1`` steps
+        rem = min(self.slots[s].max_new - len(self.slots[s].out)
+                  for s in active)
+        burst = max(1, min(self.decode_burst, rem))
+        self._grow(burst)
+        active = [s for s in range(len(self.slots))
+                  if self.slots[s] is not None]
+        if not active:
+            return True  # everything got preempted while growing
+        self._key, sub = jax.random.split(self._key)
+        t0 = time.time()
+        toks, self.cache = self._decode(burst)(
+            self.params, self.cache,
+            jnp.asarray(self.next_tok),
+            jnp.asarray(self.pos),
+            jnp.asarray(self.block_tables), sub)
+        toks = np.asarray(toks)                      # (burst, n_slots)
+        now = time.time()
+        burst = toks.shape[0]
+        self.stats["decode_steps"] += burst
+        self.stats["step_walls"].append(now - t0)
+        used_tokens = sum(int(self.pos[s]) + 1 for s in active)
+        self.stats["occupancy"].append(
+            self.pool.stats(used_tokens=used_tokens)
+            if self.layout.uses_pages else {"used_tokens": used_tokens})
+        for slot in active:
+            req = self.slots[slot]
+            for t in range(burst):
+                tok = int(toks[t, slot])
+                req.out.append(tok)
+                # per-token completion, interpolated across the burst
+                req.token_walls.append(t0 + (now - t0) * (t + 1) / burst)
+                self.stats["tokens"] += 1
+                self.pos[slot] += 1
+                self.next_tok[slot] = tok
+                if self._is_finished(req, tok):
+                    self._finish(slot)
+                    break
+        return True
+
+    # -- drain loop ---------------------------------------------------------
+
+    def run(self, requests: Optional[List[Request]] = None,
+            arrivals: Optional[List[float]] = None) -> List[Request]:
+        """Submit ``requests`` (optionally at wall-clock ``arrivals``
+        offsets — the Poisson load mode) and step until drained."""
+        pending = list(requests or [])
+        offs = list(arrivals) if arrivals is not None else [0.0] * len(pending)
+        assert len(offs) == len(pending)
+        t0 = time.time()
+        while pending or self.waiting or any(s is not None
+                                             for s in self.slots):
+            now = time.time() - t0
+            while pending and offs[0] <= now:
+                self.submit(pending.pop(0))
+                offs.pop(0)
+            if not self.step() and pending:
+                # idle but arrivals outstanding: wait for the next one
+                time.sleep(max(offs[0] - (time.time() - t0), 0.0))
+        return self.finished
+
+    # -- metrics ------------------------------------------------------------
+
+    def latency_summary(self) -> Dict[str, float]:
+        """Per-token decode latency percentiles + mean occupancy."""
+        gaps = []
+        for req in self.finished:
+            # inter-token gaps of the decode phase (the prefill token's
+            # latency is time-to-first-token, a different metric)
+            ts = req.token_walls
+            gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+        out: Dict[str, float] = {"tokens": self.stats["tokens"],
+                                 "decode_steps": self.stats["decode_steps"],
+                                 "prefills": self.stats["prefills"],
+                                 "preemptions": self.stats["preemptions"]}
+        if gaps:
+            out["p50_token_latency_s"] = float(np.percentile(gaps, 50))
+            out["p95_token_latency_s"] = float(np.percentile(gaps, 95))
+        occ = [o.get("internal_fragmentation") for o in
+               self.stats["occupancy"]
+               if o.get("internal_fragmentation") is not None]
+        util = [o.get("utilization") for o in self.stats["occupancy"]
+                if o.get("utilization") is not None]
+        if occ:
+            out["mean_internal_fragmentation"] = float(np.mean(occ))
+        if util:
+            out["mean_pool_utilization"] = float(np.mean(util))
+        return out

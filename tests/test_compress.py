@@ -467,3 +467,93 @@ def test_compressed_residual_round_trips_through_checkpoint(tmp_path):
     state2, m = restored_alg.step(got, stack_batches(batch_fn, 3, W),
                                   loss_fn=loss_fn)
     assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# topk_exact — the all-gather union-support variant (PR 5)
+# ---------------------------------------------------------------------------
+
+
+def test_topk_exact_registered_and_stateful():
+    from repro.core.compress import TopKExactReduce
+    red = TopKExactReduce(density=0.25)
+    assert "topk_exact" in registry.names(registry.REDUCER)
+    assert red.stateless is False and red.reduces_weights is False
+    assert red.hparams == {"comm_dtype": "float32", "density": 0.25}
+
+
+def test_topk_exact_is_exact_dense_mean_on_union_support():
+    """The point of the variant: on every coordinate ANY worker selected,
+    the output equals the exact dense mean BITWISE (plain topk biases a
+    coordinate selected by w of W workers low by w/W)."""
+    from repro.core.compress import TopKExactReduce, _k_of
+    red = TopKExactReduce(density=0.25)
+    plan = _tiny_plan()
+    d = _rand_buckets(plan)
+    out, rs = red(d, red.init(W, plan))
+    dense = MeanAllReduce()(d)
+    for b in range(plan.n_buckets):
+        a = np.asarray(d[b])
+        k = _k_of(a.shape[-1], 0.25)
+        thresh = np.sort(np.abs(a), axis=-1)[:, -k][:, None]
+        union = (np.abs(a) >= thresh).any(0)
+        got = np.asarray(out[b])[0]
+        want = np.asarray(dense[b])[0]
+        assert union.any() and not union.all()
+        np.testing.assert_array_equal(got[union], want[union])
+        np.testing.assert_array_equal(got[~union], 0.0)
+        # residual carries exactly the off-union mass, per worker
+        np.testing.assert_array_equal(
+            np.asarray(rs["residual"][b])[:, union], 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(rs["residual"][b])[:, ~union], a[:, ~union])
+
+
+def test_topk_exact_unbiases_the_partial_support_mean():
+    """Coordinate selected by exactly one worker: topk reports v/W with
+    the rest riding residuals; topk_exact reports the true mean."""
+    from repro.core.compress import TopKExactReduce
+    tree = {"v": jnp.zeros((16,))}
+    plan = B.plan_buckets(tree, 1, block=8)
+    # worker 0's top-1 is coordinate 0; everyone else's is coordinate 1
+    # (values distinct — ties would smear the top-k supports)
+    d = [jnp.full((W, plan.bucket_sizes[0]), 0.1)]
+    d[0] = d[0].at[0, 0].set(10.0)
+    d[0] = d[0].at[1:, 1].set(1.0)
+    exact = TopKExactReduce(density=1 / 16)
+    plain = TopKReduce(density=1 / 16)
+    oe, _ = exact(d, exact.init(W, plan))
+    op, _ = plain(d, plain.init(W, plan))
+    want = float((10.0 + 0.1 * (W - 1)) / W)
+    assert abs(float(oe[0][0, 0]) - want) < 1e-6
+    assert abs(float(op[0][0, 0]) - 10.0 / W) < 1e-6  # the bias
+
+
+def test_topk_exact_full_density_bitwise_matches_mean_allreduce():
+    from repro.core.compress import TopKExactReduce
+    red = TopKExactReduce(density=1.0)
+    plan = _tiny_plan()
+    d = _rand_buckets(plan)
+    out, rs = red(d, red.init(W, plan))
+    assert _bitwise(out, MeanAllReduce()(d))
+    assert all(not np.asarray(r).any() for r in rs["residual"])
+
+
+def test_topk_exact_wire_bytes_accounting():
+    """Per worker: k int32 support coordinates (the all-gather round) +
+    up to min(W·k, n) union values — costlier than gather-free topk,
+    bought for exactness."""
+    from repro.core.compress import TopKExactReduce
+    red = TopKExactReduce(density=0.25)
+    plan = _tiny_plan()
+    red.init(W, plan)
+    sizes = [int(n) for n in plan.bucket_sizes]
+    want = sum((n // 4) * 4 + min(W * (n // 4), n) * 4 for n in sizes)
+    assert red.wire_bytes(sizes) == want
+    plain = TopKReduce(density=0.25)
+    assert red.wire_bytes(sizes) > plain.wire_bytes(sizes)
+
+
+def test_topk_exact_in_step_time_grid():
+    from benchmarks.step_time import COMPRESSED
+    assert "topk_exact" in COMPRESSED

@@ -314,3 +314,112 @@ def test_engine_fit_runs_and_logs():
     assert int(state.step) == 5
     assert [h["step"] for h in history] == [0, 2, 4]
     assert all(jnp.isfinite(h["loss"]) for h in history)
+
+
+# ---------------------------------------------------------------------------
+# measured-skew staleness feed (Engine.fit --measure-skew, PR 5)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_measure_skew_uniform_times_never_trip():
+    """Lockstep simulation: every worker shares the measured step time,
+    so the implied progress counters stay equal and dynamic_ssp keeps
+    admitting (measured skew 0 — lockstep HAS no skew)."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+
+    class _M:
+        cfg = None
+
+        def loss(self, params, batch):
+            return loss_fn(params, batch)
+
+    alg = registry.make("dc_s3gd", CFG, n_workers=4,
+                        staleness="dynamic_ssp")
+    engine = Engine(_M(), alg)
+    state, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, 4), steps=6,
+        log_every=1, verbose=False, measure_skew=True)
+    assert all(h["measured_skew"] == 0 for h in history)
+    assert all(h["ssp_admit"] == 1.0 for h in history)
+
+
+def test_fit_measure_skew_probe_trips_dynamic_ssp():
+    """A heterogeneous deployment (here: a probe making worker 0 four
+    times slower) builds real measured skew; once it crosses the
+    threshold the policy must revoke the stale window — the ROADMAP
+    'drive dynamic_ssp from measured step times' item."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+
+    class _M:
+        cfg = None
+
+        def loss(self, params, batch):
+            return loss_fn(params, batch)
+
+    W = 4
+    cfg = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                       total_steps=1, ssp_threshold=2)
+    alg = registry.make("dc_s3gd", cfg, n_workers=W,
+                        staleness="dynamic_ssp")
+    engine = Engine(_M(), alg)
+
+    def probe(it, dt):
+        if it < 4:
+            return [4 * dt] + [dt] * (W - 1)   # worker 0 measured 4x slower
+        return [dt] * W                        # transient resolved
+
+    state, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, W), steps=10,
+        log_every=1, verbose=False, measure_skew=True, skew_probe=probe)
+    skews = [h["measured_skew"] for h in history]
+    admits = [h["ssp_admit"] for h in history]
+    assert max(skews) > 2, skews
+    assert 0.0 in admits, \
+        "measured skew above threshold never revoked the window"
+    # the sync collapses the MEASURED counters too (one spike = one sync,
+    # not a permanent offset): once the probe equalizes, the window must
+    # re-open and stay open
+    assert admits[-2:] == [1.0, 1.0], admits
+    assert skews[-1] == 0, skews
+    assert all(jnp.isfinite(h["loss"]) for h in history)
+
+
+def test_fit_measure_skew_survives_stalled_worker():
+    """A probe reporting a non-positive duration (stalled/dead worker)
+    must not crash the loop — the worker's counter just stops."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+
+    class _M:
+        cfg = None
+
+        def loss(self, params, batch):
+            return loss_fn(params, batch)
+
+    alg = registry.make("dc_s3gd", CFG, n_workers=2,
+                        staleness="dynamic_ssp")
+    engine = Engine(_M(), alg)
+    state, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, 2), steps=4,
+        log_every=1, verbose=False, measure_skew=True,
+        skew_probe=lambda it, dt: [0.0, dt])
+    assert history[-1]["measured_skew"] > 0
+    assert all(jnp.isfinite(h["loss"]) for h in history)
+
+
+def test_fit_measure_skew_noop_for_stateless_policy():
+    """fixed-window algorithms carry no staleness state: the flag must
+    not sync or annotate anything."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+
+    class _M:
+        cfg = None
+
+        def loss(self, params, batch):
+            return loss_fn(params, batch)
+
+    alg = registry.make("dc_s3gd", CFG, n_workers=2)
+    engine = Engine(_M(), alg)
+    state, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, 2), steps=3,
+        log_every=1, verbose=False, measure_skew=True)
+    assert all("measured_skew" not in h for h in history)
