@@ -22,6 +22,12 @@ ms/step (Dynamic-SSP's lesson: measure per-step cost, don't assume it).
 Step times are measured with buffer donation in effect (the Engine's
 jitted step donates the TrainState), so the numbers include the
 zero-copy state reuse the bucketed path is designed around.
+
+The JSON also carries a top-level ``resize`` entry — the cost of one
+elastic membership transition (W=8 -> W=7 through
+``repro.cluster``'s collapse-to-consensus reshard): ``resize_ms`` for
+the reshard itself and ``rejit_first_step_ms`` for the first
+(re-compiled) step at the new worker count.
 """
 from __future__ import annotations
 
@@ -126,6 +132,47 @@ def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
             "steps": steps, **counts}
 
 
+def resize_timing(model, data, *, batch_per_worker: int) -> dict:
+    """Cost of one elastic membership transition (W=8 -> W=7).
+
+    Two numbers, because they amortize differently: ``resize_ms`` is the
+    collapse-to-consensus reshard itself (`resize_state` +
+    `rebuild_algorithm` — pure array work, paid at every transition) and
+    ``rejit_first_step_ms`` is the first step at the new W (dominated by
+    the re-compile; paid once per distinct worker count)."""
+    from repro.cluster import rebuild_algorithm
+    from repro.data import worker_batches
+    from repro.launch.engine import Engine
+
+    w_old, w_new = 8, 7
+    alg = _build("dc_s3gd", "mean_allreduce", False, BUCKETS, model,
+                 w_old, 2)
+    engine = Engine(model, alg)
+    state = engine.init_state(jax.random.PRNGKey(0))
+    step_fn = engine.jit_train_step()
+    state, m = step_fn(state, worker_batches(data, 0, w_old,
+                                             batch_per_worker))
+    jax.block_until_ready((state, m))
+
+    t0 = time.perf_counter()
+    state = alg.resize_state(state, w_new)
+    jax.block_until_ready(state)
+    alg = rebuild_algorithm(alg, w_new)
+    resize_ms = (time.perf_counter() - t0) * 1e3
+
+    engine.alg = alg
+    batch = worker_batches(data, 1, w_new, batch_per_worker)
+    t0 = time.perf_counter()
+    state, m = engine.jit_train_step()(state, batch)
+    jax.block_until_ready((state, m))
+    rejit_ms = (time.perf_counter() - t0) * 1e3
+    return {"transition": f"W{w_old}->W{w_new}",
+            "algo": "dc_s3gd", "reducer": "mean_allreduce",
+            "buckets": BUCKETS,
+            "resize_ms": round(resize_ms, 3),
+            "rejit_first_step_ms": round(rejit_ms, 3)}
+
+
 def main(args=None):
     from repro.configs import get_config, reduced
     from repro.data import SyntheticLMDataset
@@ -166,6 +213,12 @@ def main(args=None):
                      f"convert_ops={row['hlo_convert_ops']};"
                      f"wire_bytes={row.get('wire_bytes_per_step', '-')}")
 
+    # the elastic-transition cost rides along with the step-time grid:
+    # one row, not a grid — the reshard is reducer-independent
+    resize = resize_timing(model, data, batch_per_worker=bpw)
+    emit("step_time_resize_w8_w7", resize["resize_ms"] * 1e3,
+         f"rejit_first_step_ms={resize['rejit_first_step_ms']}")
+
     if getattr(args, "json", False):
         out = {
             "bench": "step_time",
@@ -174,6 +227,7 @@ def main(args=None):
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "smoke": smoke,
+            "resize": resize,
             "rows": rows,
         }
         full_grid = tuple(algos) == FULL_ALGOS

@@ -64,8 +64,21 @@ def restore_pytree(path: str | Path, like: PyTree,
            for n, x, l in zip(names, leaves, like_leaves)
            if hasattr(l, "shape") and tuple(x.shape) != tuple(l.shape)]
     if bad:
+        hint = ""
+        # mismatches confined to the leading (worker) dim are almost
+        # always a worker-count change, not corruption — point at the
+        # elastic-resume path instead of leaving shape soup
+        lead_only = all(len(c) == len(t) and c[0] != t[0] and c[1:] == t[1:]
+                        for _, c, t in bad if c and t)
+        if lead_only and meta.get("n_workers") is not None:
+            hint = (f" — every mismatch is leading-dim only and the "
+                    f"checkpoint records n_workers={meta['n_workers']}: "
+                    f"this looks like a worker-count change. Restore at "
+                    f"the checkpoint's count and reshard via the elastic "
+                    f"resize (train --resume --workers N, or "
+                    f"alg.resize_state; see docs/cluster.md)")
         raise ValueError(f"checkpoint shape mismatch (ckpt vs template): "
-                         f"{bad[:5]}")
+                         f"{bad[:5]}{hint}")
     bad_dt = [(n, str(x.dtype), str(jnp.dtype(l.dtype)))
               for n, x, l in zip(names, leaves, like_leaves)
               if hasattr(l, "dtype") and x.dtype != jnp.dtype(l.dtype)]

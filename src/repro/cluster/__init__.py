@@ -1,0 +1,20 @@
+"""Elastic worker membership: `ClusterSpec`, live resize, fault injection.
+
+The subsystem that lets W itself change mid-run (docs/cluster.md):
+
+* `spec.ClusterSpec` / `spec.Worker` / `spec.ClusterEvent` — the
+  membership contract (worker order == state stacking order);
+* `membership.Membership` — the controller: events in, resized/resharded
+  state + rebuilt algorithm out, deterministic transition log;
+* `membership.rebuild_algorithm` — the same algorithm retargeted to a
+  new worker count (elastic resume shares it with live resize);
+* `faults.FaultSchedule` / `faults.FaultEvent` — scripted, seeded
+  join/leave/eject/slowdown timelines so every transition is testable
+  in CI without real node failures.
+"""
+from repro.cluster.faults import FaultEvent, FaultSchedule
+from repro.cluster.membership import Membership, rebuild_algorithm
+from repro.cluster.spec import ClusterEvent, ClusterSpec, Worker
+
+__all__ = ["ClusterEvent", "ClusterSpec", "FaultEvent", "FaultSchedule",
+           "Membership", "Worker", "rebuild_algorithm"]

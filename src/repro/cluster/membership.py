@@ -1,0 +1,172 @@
+"""`Membership` — the controller that makes the worker count a variable.
+
+Owns the live `ClusterSpec` for a training run and, at step boundaries,
+turns membership events (scripted faults, straggler ejections) into a
+resized run: the carried `TrainState` collapses to consensus and
+restacks via the algorithm's ``resize_state`` hook, and the algorithm
+object itself is rebuilt at the new W by `rebuild_algorithm` — same
+config, same piece objects (reducer/optimizer/policy), fresh bucket-plan
+cache.  ``Engine.fit(membership=...)`` drives it: polls events before
+each step, re-jits after a transition, and feeds measured per-worker
+progress to `observe_progress` so a persistent straggler gets ejected
+(the skew-threshold analogue of the ``dynamic_ssp`` revoke — revoke
+handles a transient spike with one sync step, ejection handles a worker
+that stays slow).
+
+Every transition is appended to ``log`` — deterministic dicts (step,
+kind, worker, reason, worker counts; never wall-clock), so the same
+seeded fault schedule produces the same log bit-for-bit, which CI
+asserts.
+
+Elastic resume is the same code path minus the controller:
+``train --resume --workers 6`` against a W=8 checkpoint calls
+``resize_state`` + `rebuild_algorithm` directly (`repro.launch.train`).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+from repro.cluster.faults import FaultSchedule
+from repro.cluster.spec import ClusterEvent, ClusterSpec
+
+
+def rebuild_algorithm(alg, n_new: int):
+    """The same algorithm, retargeted to ``n_new`` workers.
+
+    Goes back through `repro.core.registry.make` with the *objects* the
+    old instance composed (the make_* factories pass non-string specs
+    through), so reducer hyper-parameters, warm state captured on the
+    pieces (e.g. ``topk_exact``'s worker count — updated by its own
+    ``resize``), and the local optimizer survive; only the worker count
+    and the (worker-count-independent, lazily re-cached) bucket-plan
+    cache change."""
+    kw: dict = {"n_workers": int(n_new)}
+    for attr in ("local_optimizer", "reducer", "compensator", "staleness"):
+        if hasattr(alg, attr):
+            kw[attr] = getattr(alg, attr)
+    for attr in ("use_kernels", "buckets"):
+        if hasattr(alg, attr):
+            kw[attr] = getattr(alg, attr)
+    from repro.core import registry
+    return registry.make(alg.name, alg.cfg, **kw)
+
+
+class Membership:
+    """Join/leave/eject controller over a `ClusterSpec` (module docstring).
+
+    eject_threshold  virtual-clock step-skew beyond which a worker counts
+                     as straggling (None disables the ejection policy);
+    eject_patience   consecutive over-threshold observations before the
+                     eject fires — one slow step is a revoke's job, not
+                     an ejection's;
+    min_workers      the policy never ejects below this count (scripted
+                     leaves still obey their script, floored at 1).
+    """
+
+    def __init__(self, alg, spec: Optional[ClusterSpec] = None, *,
+                 faults: Optional[FaultSchedule] = None,
+                 eject_threshold: Optional[float] = None,
+                 eject_patience: int = 3, min_workers: int = 2):
+        self.alg = alg
+        self.spec = spec if spec is not None else \
+            ClusterSpec.uniform(getattr(alg, "n_workers", 1))
+        assert self.spec.n_workers == getattr(alg, "n_workers", 1), \
+            (self.spec.n_workers, getattr(alg, "n_workers", 1))
+        self.faults = faults
+        self.eject_threshold = eject_threshold
+        self.eject_patience = int(eject_patience)
+        self.min_workers = int(min_workers)
+        self.log: List[dict] = []
+        self._streak: dict = {}
+        self._pending: List[ClusterEvent] = []
+
+    @property
+    def n_workers(self) -> int:
+        return self.spec.n_workers
+
+    # -- event sources -------------------------------------------------------
+
+    def poll(self, step: int) -> List[ClusterEvent]:
+        """Events due before step ``step`` runs: queued ejections first
+        (decided on the previous step's measurements), then the fault
+        schedule's scripted events."""
+        events, self._pending = self._pending, []
+        if self.faults is not None:
+            events += self.faults.membership_events(step, self.spec)
+        return events
+
+    def slowdown_factors(self, step: int) -> Optional[List[float]]:
+        return None if self.faults is None else \
+            self.faults.slowdown_factors(step, self.spec)
+
+    def observe_progress(self, step: int, progress) -> None:
+        """Feed measured per-worker virtual progress (spec order) to the
+        ejection policy: a worker lagging the leader by more than
+        ``eject_threshold`` steps for ``eject_patience`` consecutive
+        observations is queued for ejection at the next boundary."""
+        if self.eject_threshold is None or not progress:
+            return
+        top = max(progress)
+        for wid, p in zip(self.spec.ids, progress):
+            lag = top - p
+            if lag <= self.eject_threshold:
+                self._streak.pop(wid, None)
+                continue
+            streak = self._streak.get(wid, 0) + 1
+            self._streak[wid] = streak
+            if (streak >= self.eject_patience
+                    and self.spec.n_workers - len(self._pending)
+                    > self.min_workers
+                    and all(e.worker != wid for e in self._pending)):
+                self._pending.append(ClusterEvent(
+                    "eject", worker=wid,
+                    reason=f"lag {lag:.1f} > {self.eject_threshold} "
+                           f"for {streak} steps"))
+
+    # -- applying transitions ------------------------------------------------
+
+    def apply(self, events: List[ClusterEvent], state, *, step: int):
+        """Apply membership events at a step boundary.
+
+        Returns ``(state, changed)``: the (possibly resharded) state and
+        whether the membership changed (the caller must then re-jit
+        against ``self.alg``, which has been rebuilt at the new W).
+        Resize semantics live in the algorithm's ``resize_state``
+        (collapse-to-consensus barrier; see `repro.core.dc_s3gd`) — and
+        apply to EVERY membership change, including a same-count
+        leave+join pair: the joiner must bootstrap from the consensus,
+        never inherit the leaver's row."""
+        spec = self.spec
+        for ev in events:
+            if ev.kind in ("leave", "eject"):
+                if spec.n_workers <= 1 or ev.worker not in spec.ids:
+                    continue
+                spec = spec.without(ev.worker)
+                self._streak.pop(ev.worker, None)
+                self.log.append({"step": int(step), "kind": ev.kind,
+                                 "worker": ev.worker, "reason": ev.reason,
+                                 "n_workers": spec.n_workers})
+            elif ev.kind == "join":
+                before = spec.ids
+                spec = spec.joined(ev.count, pod=ev.pod)
+                joined = [i for i in spec.ids if i not in before]
+                self.log.append({"step": int(step), "kind": "join",
+                                 "worker": ",".join(joined),
+                                 "reason": ev.reason,
+                                 "n_workers": spec.n_workers})
+            else:
+                raise ValueError(f"unknown membership event kind "
+                                 f"{ev.kind!r}")
+        n_new = spec.n_workers
+        mutated = spec.ids != self.spec.ids
+        self.spec = spec
+        if not mutated:
+            return state, False
+        if not hasattr(self.alg, "resize_state"):
+            raise TypeError(
+                f"algorithm {self.alg.name!r} has no resize_state hook — "
+                f"it cannot train through membership changes (see the "
+                f"DistributedOptimizer contract in repro.core.api)")
+        state = self.alg.resize_state(state, n_new)
+        self.alg = rebuild_algorithm(self.alg, n_new)
+        return state, True

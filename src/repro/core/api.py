@@ -137,6 +137,14 @@ class Reducer(Protocol):
     algorithms branch on ``stateless`` (absent attribute == stateless),
     exactly like the ``comm["staleness"]`` threading.
 
+    Stateful reducers additionally provide ``resize(rstate, n_new)`` —
+    the elastic-membership hook (`repro.cluster`): return the carried
+    state resharded to ``n_new`` workers with the error-feedback mass
+    conserved (leavers' undelivered residuals fold into the survivors,
+    they are never dropped).  Stateless reducers need nothing: they
+    carry no state and their math is written over whatever leading
+    worker dim arrives.
+
     Two more introspection hooks every registered reducer provides:
     ``hparams`` (the constructor knobs a checkpoint must round-trip —
     neighbors, groups, comm_dtype, density, rank) and
@@ -202,6 +210,13 @@ class StalenessPolicy(Protocol):
         """PartitionSpecs matching :meth:`init`'s structure."""
         ...
 
+    def resize(self, pstate: PyTree, n_new: int) -> PyTree:
+        """Reshard the carried state to ``n_new`` workers (elastic
+        membership, `repro.cluster`).  A transition is a synchronization
+        barrier, so per-worker counters collapse to the leader before
+        restacking; stateless policies return ``{}``."""
+        ...
+
 
 @runtime_checkable
 class DistributedOptimizer(Protocol):
@@ -213,6 +228,21 @@ class DistributedOptimizer(Protocol):
     worker-sharded algorithms put the worker axes on the leading state
     dim, replicated ones return canonical specs.  The launch layer
     (`repro.launch.engine.Engine`) never inspects algorithm internals.
+
+    Two optional hooks (checked by attribute presence, like the
+    ``observe_progress`` seam — not part of the runtime-checkable body
+    so legacy algorithms stay conformant):
+
+    * ``observe_progress(state, worker_steps)`` — fold measured
+      per-worker progress into the staleness policy's carried state;
+    * ``resize_state(state, n_new)`` — reshard every piece of carried
+      state to a new worker count (elastic membership, `repro.cluster`):
+      a pure state transform with collapse-to-consensus barrier
+      semantics, after which `repro.cluster.membership.rebuild_algorithm`
+      rebuilds the algorithm object itself at the new W (reusing the
+      same piece objects, re-caching bucket plans).  Algorithms without
+      the hook (e.g. the DC-ASGD simulator) simply cannot be resized —
+      the `Membership` controller raises a clear error.
     """
 
     name: str

@@ -156,6 +156,28 @@ class _ErrorFeedbackMean:
     def _advance(self, rstate: PyTree) -> PyTree:
         return rstate
 
+    def resize(self, rstate: PyTree, n_new: int) -> PyTree:
+        """Elastic resize of the carried EF state (`repro.cluster`).
+
+        The residual is *mass*, not per-worker preference: it is exactly
+        the part of past payloads that compression has not yet delivered
+        to the trajectory, and the EF convergence guarantee rests on all
+        of it eventually arriving.  Dropping a leaver's rows would lose
+        its undelivered updates for good, so the summed residual is
+        redistributed equally over the new workers — total mass per
+        bucket is conserved across the fold (up to one f32 rounding).
+
+        Counters and warm starts (randk's shared ``step``, powersgd's
+        projection ``q``) are worker-count independent and carry over
+        unchanged via the shared dict copy."""
+        n_new = int(n_new)
+        out = dict(rstate)
+        out["residual"] = [
+            jnp.broadcast_to(jnp.sum(r, axis=0) / jnp.float32(n_new),
+                             (n_new,) + r.shape[1:])
+            for r in rstate["residual"]]
+        return out
+
     def _compress(self, b: int, a: jnp.ndarray, rstate: PyTree
                   ) -> jnp.ndarray:
         raise NotImplementedError
@@ -218,6 +240,12 @@ class TopKExactReduce(TopKReduce):
     def init(self, n_workers: int, plan) -> PyTree:
         self._n_workers = int(n_workers)
         return super().init(n_workers, plan)
+
+    def resize(self, rstate: PyTree, n_new: int) -> PyTree:
+        # the union payload (and thus wire_bytes) scales with W — track
+        # the membership change, not the count captured at init()
+        self._n_workers = int(n_new)
+        return super().resize(rstate, n_new)
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
         it = jnp.dtype(self.comm_dtype).itemsize

@@ -316,9 +316,64 @@ class DCS3GD:
         return comm
 
     def eval_params(self, state: TrainState) -> PyTree:
-        """w̄ for evaluation (paper Eq. 8 / averaging-in-parameter-space)."""
-        return jax.tree.map(
-            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), state.params)
+        """w̄ for evaluation (paper Eq. 8 / averaging-in-parameter-space).
+
+        Anchor form (`repro.core.reduce.consensus_mean`): exact when the
+        workers agree, for ANY W — which makes the elastic resize's
+        collapse-and-restack a bitwise fixed point of this function."""
+        from repro.core.reduce import consensus_mean
+        return consensus_mean(state.params)
+
+    def resize_state(self, state: TrainState, n_new: int) -> TrainState:
+        """Reshard the carried state to ``n_new`` workers (elastic resize).
+
+        A membership transition is a synchronization barrier — every
+        worker-stacked piece collapses to its consensus mean over ALL old
+        workers and is restacked at the new count:
+
+        * **params / opt slots** — collapse to the anchor-form consensus
+          (leavers' weights and momentum fold into the surviving mean,
+          they are NOT dropped); joiners bootstrap from that same
+          consensus, so ``eval_params`` after the resize is bitwise the
+          pre-resize value;
+        * **delta_prev** — the in-flight wire payload collapses the same
+          way: the next step's ``Δ̄w − Δw_i`` is exactly zero (every
+          worker already sits at the consensus), reproducing Algorithm
+          1's prologue semantics after the barrier;
+        * **comm["staleness"] / comm["reducer"]** — delegated to the
+          piece's own ``resize`` hook (counters collapse to the leader;
+          error-feedback residual mass is conserved, see
+          `repro.core.compress`).
+
+        Pure state transform: ``self`` still targets the old worker
+        count afterwards — rebuild the algorithm for ``n_new`` via
+        `repro.cluster.membership.rebuild_algorithm` (bucket plans are
+        worker-count independent, so the plan is simply re-cached).
+        """
+        n_new = int(n_new)
+
+        def restack(x):
+            if getattr(x, "ndim", 0) == 0:
+                return x  # scalar slot (e.g. adam's step count)
+            a = x.astype(jnp.float32)
+            avg = a[0] + jnp.mean(a - a[:1], axis=0)
+            return jnp.broadcast_to(avg.astype(x.dtype)[None],
+                                    (n_new,) + avg.shape)
+
+        params = jax.tree.map(restack, state.params)
+        opt = jax.tree.map(restack, state.opt)
+        comm = {}
+        if "delta_prev" in state.comm:
+            # bucketed (list of (W, n) buffers) and per-leaf trees alike
+            comm["delta_prev"] = jax.tree.map(restack,
+                                              state.comm["delta_prev"])
+        if "staleness" in state.comm:
+            comm["staleness"] = self.staleness.resize(
+                state.comm["staleness"], n_new)
+        if "reducer" in state.comm:
+            comm["reducer"] = self.reducer.resize(state.comm["reducer"],
+                                                  n_new)
+        return TrainState(params, opt, comm, state.step)
 
     # -- sharding hooks -----------------------------------------------------
 

@@ -204,3 +204,24 @@ def collapse_worker_axis(tree: PyTree) -> PyTree:
     over whatever worker dim remains (size 1 for ``mean_allreduce``, W for
     ``gossip``).  Exact (division by 1) for the keepdims mean."""
     return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def consensus_mean(tree: PyTree) -> PyTree:
+    """Anchor-form mean over the leading worker axis:
+    ``w̄ = w_0 + mean_i(w_i − w_0)``, f32 out.
+
+    Algebraically the plain mean, but with one crucial floating-point
+    property the naive ``jnp.mean`` lacks: when every row is identical
+    the differences are exact zeros, their mean is an exact zero, and
+    the result is ``w_0`` **bitwise — for any worker count W**.  (The
+    naive sum-then-divide mean of W identical f32 rows is only bitwise
+    exact when W is a power of two; W = 3, 5, 6, 7 each perturb a large
+    fraction of mantissas by 1 ulp.)  The elastic resize path
+    (`repro.cluster`) depends on this: collapse-to-consensus followed by
+    restack-at-new-W must be a fixed point of ``eval_params`` — the
+    post-reshard consensus is pinned bitwise to the pre-resize one no
+    matter how awkward the new W is."""
+    def red(p):
+        x = p.astype(jnp.float32)
+        return x[0] + jnp.mean(x - x[:1], axis=0)
+    return jax.tree.map(red, tree)

@@ -118,6 +118,18 @@ class SSGD:
     def eval_params(self, state: TrainState) -> PyTree:
         return state.params
 
+    def resize_state(self, state: TrainState, n_new: int) -> TrainState:
+        """Elastic resize: SSGD params/opt are canonical (replicated —
+        trivially the consensus already, so ``eval_params`` is bitwise
+        unchanged); the only worker-stacked state is a stateful
+        reducer's per-worker error-feedback residuals, which delegate
+        to the reducer's own ``resize`` (mass-conserving fold)."""
+        comm = dict(state.comm)
+        if "reducer" in comm:
+            comm["reducer"] = self.reducer.resize(comm["reducer"],
+                                                  int(n_new))
+        return state._replace(comm=comm)
+
     # -- sharding hooks -----------------------------------------------------
 
     def state_specs(self, model_cfg, state: TrainState,

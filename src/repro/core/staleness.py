@@ -66,6 +66,10 @@ class FixedWindow:
     def observe(self, pstate: PyTree, worker_steps) -> PyTree:
         return pstate
 
+    def resize(self, pstate: PyTree, n_new: int) -> PyTree:
+        """Elastic resize: nothing carried, nothing to reshape."""
+        return {}
+
 
 @registry.register(registry.STALENESS_POLICY, "dynamic_ssp")
 class DynamicSSP:
@@ -110,3 +114,12 @@ class DynamicSSP:
         out = dict(pstate)
         out["worker_steps"] = jnp.asarray(worker_steps, jnp.int32)
         return out
+
+    def resize(self, pstate: PyTree, n_new: int) -> PyTree:
+        """Elastic resize: a membership transition is a synchronization
+        barrier (survivors and joiners all hold the fresh consensus), so
+        the counters collapse to the leader — the same SSP semantics as
+        a revoked window — and the skew starts at zero at the new W."""
+        top = jnp.max(pstate["worker_steps"])
+        return {"worker_steps": jnp.broadcast_to(top, (int(n_new),))
+                .astype(jnp.int32)}

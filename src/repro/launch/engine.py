@@ -79,6 +79,10 @@ class Engine:
         self.model = model
         self.alg = alg
         self.mesh = mesh
+        # fail fast on a worker count the mesh cannot carry — the same
+        # mistake surfaced inside jit as an opaque XLA sharding error
+        if alg is not None:
+            shd.validate_worker_count(getattr(alg, "n_workers", None), mesh)
         # compiled (prefill, decode-loop) pairs for `generate`, keyed by
         # (shape, cache_len, sampler, ...) — rebuilt jits used to leak a
         # recompilation into EVERY repeated serve call
@@ -155,10 +159,11 @@ class Engine:
                        out_shardings=(st_sh, None),
                        donate_argnums=donate_argnums)
 
-    def fit(self, state: PyTree, batch_fn: Callable[[int], PyTree], *,
+    def fit(self, state: PyTree, batch_fn: Callable[..., PyTree], *,
             steps: int, start: int = 0, log_every: int = 10,
             verbose: bool = True, measure_skew: bool = False,
-            skew_probe: Optional[Callable[[int, float], Any]] = None
+            skew_probe: Optional[Callable[[int, float], Any]] = None,
+            skew_warmup: int = 1, membership=None
             ) -> Tuple[PyTree, list, float]:
         """Run the step loop; returns (state, metric history, wall s).
 
@@ -186,38 +191,99 @@ class Engine:
         heterogeneous deployment (or a test) plugs real per-worker
         timings into (a non-positive duration means a stalled worker:
         its counter simply stops advancing).  The per-step sync this
-        needs serializes dispatch — only paid behind the flag."""
-        first = batch_fn(start) if steps > start else None
-        step_fn = self.jit_train_step(state, first)
-        measuring = (measure_skew and self.alg is not None
-                     and hasattr(self.alg, "observe_progress")
-                     and not getattr(getattr(self.alg, "staleness", None),
-                                     "stateless", True))
-        n_workers = getattr(self.alg, "n_workers", 1) if measuring else 0
+        needs serializes dispatch — only paid behind the flag.
+
+        ``skew_warmup`` excludes that many leading steps from the
+        virtual-clock advance: the first step's measured duration is
+        dominated by JIT compilation, not worker speed, and feeding the
+        spike into the skew signal made ``dynamic_ssp`` (and the
+        ejection policy) trigger on compilation.  The exclusion window
+        re-arms after every membership transition — a resize re-jits,
+        so the next step carries a fresh compile spike.
+
+        ``membership`` (a `repro.cluster.Membership`) makes the run
+        elastic: scripted fault events and queued straggler ejections
+        are polled at every step boundary and applied as a
+        collapse-to-consensus resize (``alg.resize_state`` +
+        `repro.cluster.membership.rebuild_algorithm`), after which the
+        step re-jits at the new worker count.  Elastic runs call
+        ``batch_fn(it, n_workers)`` — the batch must follow the live
+        worker count — and feed measured per-worker progress to the
+        controller's ejection policy (under ``measure_skew``, which
+        works here even for the stateless ``fixed`` staleness policy)."""
+        elastic = membership is not None
+        if elastic:
+            self.alg = membership.alg
+        cur_w = getattr(self.alg, "n_workers", 1)
+
+        def make_batch(it):
+            return batch_fn(it, cur_w) if elastic else batch_fn(it)
+
+        def stateful_policy():
+            return (self.alg is not None
+                    and hasattr(self.alg, "observe_progress")
+                    and not getattr(getattr(self.alg, "staleness", None),
+                                    "stateless", True))
+
+        batch = make_batch(start) if steps > start else None
+        step_fn = self.jit_train_step(state, batch)
+        stateful = stateful_policy()
+        measuring = measure_skew and (stateful or elastic)
+        n_workers = cur_w if measuring else 0
         vprogress = [0.0] * n_workers  # measured free-running step counts
+        warmup = max(int(skew_warmup), 0)
+        warm_until = start + warmup    # steps below this: compile spike
         history = []
         t0 = time.time()
         for it in range(start, steps):
-            batch = first if it == start else batch_fn(it)
+            rejit = False
+            if elastic:
+                events = membership.poll(it)
+                if events:
+                    state, rejit = membership.apply(events, state, step=it)
+                    if rejit:
+                        self.alg = membership.alg
+                        cur_w = membership.n_workers
+                        stateful = stateful_policy()
+                        n_workers = cur_w if measuring else 0
+                        # the transition is a barrier: everyone leaves it
+                        # in lockstep at the leader's virtual clock
+                        vprogress = [max(vprogress, default=0.0)] \
+                            * n_workers
+                        # re-jit => a fresh compile spike on the next
+                        # step: exclude it like the step-0 one
+                        warm_until = it + warmup
+            if it != start or rejit:
+                batch = make_batch(it)
+            if rejit:
+                step_fn = self.jit_train_step(state, batch)
             ts = time.perf_counter()
             state, metrics = step_fn(state, batch)
             if measuring:
                 jax.block_until_ready(metrics)
                 dt = time.perf_counter() - ts
-                durs = list(skew_probe(it, dt)) if skew_probe is not None \
-                    else [dt] * n_workers
-                assert len(durs) == n_workers, (len(durs), n_workers)
-                if float(jax.device_get(metrics.get("ssp_admit", 1.0))) \
-                        == 0.0:
-                    # the policy revoked the window and did its blocking
-                    # pull: the sync resolved the accumulated skew, so
-                    # the measured counters collapse to the leader too
-                    vprogress = [max(vprogress)] * n_workers
-                wall = max(durs)
-                vprogress = [p + (wall / d if d > 0 else 0.0)
-                             for p, d in zip(vprogress, durs)]
+                if it >= warm_until:
+                    durs = list(skew_probe(it, dt)) \
+                        if skew_probe is not None else [dt] * n_workers
+                    assert len(durs) == n_workers, (len(durs), n_workers)
+                    slow = membership.slowdown_factors(it) if elastic \
+                        else None
+                    if slow is not None:
+                        durs = [d * f for d, f in zip(durs, slow)]
+                    if stateful and float(jax.device_get(
+                            metrics.get("ssp_admit", 1.0))) == 0.0:
+                        # the policy revoked the window and did its
+                        # blocking pull: the sync resolved the skew, so
+                        # the measured counters collapse to the leader
+                        vprogress = [max(vprogress)] * n_workers
+                    wall = max(durs)
+                    vprogress = [p + (wall / d if d > 0 else 0.0)
+                                 for p, d in zip(vprogress, durs)]
                 progress = [int(p) for p in vprogress]
-                state = self.alg.observe_progress(state, progress)
+                if stateful:
+                    state = self.alg.observe_progress(state, progress)
+                if elastic:
+                    membership.observe_progress(it, vprogress)
             if it % log_every == 0 or it == steps - 1:
                 m = {k: float(v)
                      for k, v in jax.device_get(metrics).items()}
@@ -225,6 +291,8 @@ class Engine:
                 m["wall_s"] = round(time.time() - t0, 1)
                 if measuring:
                     m["measured_skew"] = max(progress) - min(progress)
+                if elastic:
+                    m["n_workers"] = cur_w
                 history.append(m)
                 if verbose:
                     extra = ""

@@ -39,3 +39,34 @@ def make_axes(mesh):
     from repro.core.api import MeshAxes
     return MeshAxes(worker=worker_axes(mesh), model="model",
                     model_size=mesh.shape.get("model", 1))
+
+
+def mesh_for_spec(spec, *, model: int = 1, devices=None):
+    """Rebuild the device mesh for a cluster membership (`repro.cluster`).
+
+    A spec spanning several pods gets the leading 'pod' axis (the
+    hierarchical reducer's slow-wire dim); the worker product lays over
+    the data axis sized to what the visible devices can actually carry —
+    the largest divisor of the per-pod worker count that the per-pod
+    device share supports.  Fewer devices than workers is the single-
+    host simulation: each device carries W/data worker rows (the resize
+    validity condition checked by
+    `repro.parallel.sharding.validate_worker_count`).
+    """
+    import math
+
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    avail = max(len(devices) // max(model, 1), 1)
+    W = spec.n_workers
+    pods = len(spec.pods())
+    multi = pods > 1 and W % pods == 0 and avail % pods == 0
+    per_pod_workers = W // pods if multi else W
+    per_pod_devs = avail // pods if multi else avail
+    data = math.gcd(per_pod_workers, per_pod_devs)
+    shape = (pods, data, model) if multi else (data, model)
+    axes = ("pod", "data", "model") if multi else ("data", "model")
+    used = int(np.prod(shape))
+    return Mesh(np.array(devices[:used]).reshape(shape), axes)

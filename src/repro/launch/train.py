@@ -15,7 +15,12 @@ sharding trees, jit, checkpointing, and step loop all live in
 
 ``--resume`` reads the checkpoint's {algo, reducer, local_optimizer,
 n_workers, staleness} metadata back instead of trusting the re-passed
-flags (pre-metadata checkpoints fall back to the flags).
+flags (pre-metadata checkpoints fall back to the flags).  Passing an
+explicit ``--workers`` that differs from the checkpoint's count performs
+an **elastic resume**: the state is restored at the checkpoint's W and
+resharded through `repro.cluster`'s collapse-to-consensus resize.
+``--fault-schedule`` / ``--eject-skew`` make the run itself elastic
+(scripted churn, straggler ejection — see docs/cluster.md).
 """
 from __future__ import annotations
 
@@ -66,8 +71,31 @@ def build_argparser():
                     help="drive the staleness policy from measured "
                          "wall-clock step times (syncs every step; see "
                          "Engine.fit) instead of only injected progress")
+    ap.add_argument("--skew-warmup", type=int, default=1,
+                    help="leading steps excluded from the measured-skew "
+                         "virtual clock (the JIT compile spike is not a "
+                         "skew signal); re-arms after every resize")
+    ap.add_argument("--fault-schedule", type=Path, default=None,
+                    help="JSON fault schedule (repro.cluster.faults): "
+                         "scripted join/leave/eject/slowdown events make "
+                         "the run elastic")
+    ap.add_argument("--eject-skew", type=float, default=None,
+                    help="eject a worker whose measured virtual-clock lag "
+                         "exceeds this many steps persistently (needs "
+                         "--measure-skew); None disables ejection")
+    ap.add_argument("--eject-patience", type=int, default=3,
+                    help="consecutive over-threshold observations before "
+                         "an ejection fires")
+    ap.add_argument("--min-workers", type=int, default=2,
+                    help="the ejection policy never shrinks below this")
+    ap.add_argument("--transition-log", type=Path, default=None,
+                    help="write the membership transition log (JSON) here")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker count W (default 4; on --resume the "
+                         "checkpoint's count — passing a DIFFERENT count "
+                         "reshards the state through the elastic resize "
+                         "path, e.g. a W=8 checkpoint resumed at 6)")
     ap.add_argument("--batch-per-worker", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
@@ -116,9 +144,17 @@ def run(args) -> dict:
     model = Model(cfg, remat=False, moe_dense=args.reduced,
                   q_chunk=64, kv_chunk=64, scan_chunk=64, loss_chunk=256)
 
+    # an explicit --workers on resume is an elastic-resume request: the
+    # state is restored at the CHECKPOINT's count, then resharded
+    requested_workers = args.workers
     resuming = args.resume is not None and checkpoint_exists(args.resume)
     if resuming:
         _adopt_resume_meta(args)
+    if args.workers is None:
+        args.workers = 4
+    resize_to = requested_workers if (
+        resuming and requested_workers is not None
+        and requested_workers != args.workers) else None
 
     dc_cfg = DCS3GDConfig(
         learning_rate=args.lr, momentum=args.momentum, lambda0=args.lambda0,
@@ -150,6 +186,17 @@ def run(args) -> dict:
         state = engine.restore(args.resume, state)
         start = int(state.step)
         print(f"[train] resumed from {args.resume} at step {start}")
+        if resize_to is not None:
+            # elastic resume: the SAME collapse-to-consensus code path as
+            # a live resize — the resharded consensus is bitwise the
+            # checkpoint's (tests/test_cluster.py pins this)
+            from repro.cluster import rebuild_algorithm
+            state = alg.resize_state(state, resize_to)
+            alg = rebuild_algorithm(alg, resize_to)
+            engine.alg = alg
+            print(f"[train] elastic resume: resharded "
+                  f"W={args.workers} -> W={resize_to}")
+            args.workers = resize_to
 
     print(f"[train] {cfg.name} ({n_params/1e6:.1f}M params) algo={alg.name} "
           f"reducer={alg.reducer.name if hasattr(alg, 'reducer') else '-'} "
@@ -157,25 +204,48 @@ def run(args) -> dict:
           f"{alg.staleness.name if hasattr(alg, 'staleness') else '-'} "
           f"W={args.workers} b={args.batch_per_worker} seq={args.seq}")
 
-    def batch_fn(it):
-        return worker_batches(data, it, args.workers, args.batch_per_worker)
+    membership = None
+    if args.fault_schedule is not None or args.eject_skew is not None:
+        from repro.cluster import FaultSchedule, Membership
+        faults = FaultSchedule.from_json(args.fault_schedule) \
+            if args.fault_schedule is not None else None
+        membership = Membership(alg, faults=faults,
+                                eject_threshold=args.eject_skew,
+                                eject_patience=args.eject_patience,
+                                min_workers=args.min_workers)
+
+    def batch_fn(it, n_workers=args.workers):
+        return worker_batches(data, it, n_workers, args.batch_per_worker)
 
     state, history, wall = engine.fit(
         state, batch_fn, steps=args.steps, start=start,
-        log_every=args.log_every, measure_skew=args.measure_skew)
+        log_every=args.log_every, measure_skew=args.measure_skew,
+        skew_warmup=args.skew_warmup, membership=membership)
+
+    final_workers = membership.n_workers if membership is not None \
+        else args.workers
 
     if args.ckpt:
+        # engine.alg tracks membership transitions: the metadata records
+        # the worker count the state actually has, not the t=0 flag
         engine.save(args.ckpt, state, step=args.steps)
         print(f"[train] checkpoint -> {args.ckpt}")
 
     result = {
         "arch": cfg.name, "algo": args.algo, "steps": args.steps,
-        "workers": args.workers, "final_loss": history[-1]["loss"],
+        "workers": final_workers, "final_loss": history[-1]["loss"],
         "wall_s": round(wall, 1),
         "tokens_per_s": round(args.steps * args.workers
                               * args.batch_per_worker * args.seq / wall, 1),
         "history": history,
     }
+    if membership is not None:
+        result["transitions"] = membership.log
+        if args.transition_log is not None:
+            args.transition_log.parent.mkdir(parents=True, exist_ok=True)
+            args.transition_log.write_text(
+                json.dumps(membership.log, indent=2))
+            print(f"[train] transition log -> {args.transition_log}")
     if args.metrics_out:
         args.metrics_out.parent.mkdir(parents=True, exist_ok=True)
         args.metrics_out.write_text(json.dumps(result, indent=2))

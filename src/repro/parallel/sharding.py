@@ -31,6 +31,35 @@ def _attn_shardable(n: int, model_size: int) -> bool:
     return n > 0 and n % model_size == 0
 
 
+def validate_worker_count(n_workers, mesh) -> None:
+    """Fail fast when ``n_workers`` cannot be laid out on ``mesh``.
+
+    The (W, ...) state leaves and the (W, b, ...) batch shard their
+    leading dim over every non-'model' mesh axis, which requires W to be
+    a multiple of that axis product.  Without this check a mismatched
+    mesh survives Engine construction and fails deep inside jit with an
+    opaque XLA sharding error; here it raises at construction with the
+    numbers spelled out.  ``mesh=None`` (single-host smoke simulation —
+    no sharding at all) and algorithms without a worker count validate
+    trivially."""
+    if mesh is None or n_workers is None:
+        return
+    worker_axes = tuple(a for a in mesh.axis_names if a != "model")
+    capacity = 1
+    for a in worker_axes:
+        capacity *= mesh.shape[a]
+    if int(n_workers) % capacity != 0:
+        import jax
+        raise ValueError(
+            f"n_workers={n_workers} cannot shard over the mesh's worker "
+            f"axes {worker_axes} (product {capacity}, mesh shape "
+            f"{dict(mesh.shape)}, {jax.device_count()} visible devices): "
+            f"the leading worker dim of every state/batch leaf must be a "
+            f"multiple of {capacity}. Use a worker count divisible by "
+            f"{capacity}, or rebuild the mesh for this membership "
+            f"(repro.cluster / launch.mesh.mesh_for_spec).")
+
+
 def _base_spec(name: str, parent: str, ndim: int, cfg: ModelConfig,
                model_size: int) -> Tuple:
     """Spec for the canonical (unstacked) parameter."""

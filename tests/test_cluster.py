@@ -1,0 +1,492 @@
+"""Elastic worker membership (`repro.cluster`): ClusterSpec, the
+collapse-to-consensus resize, elastic resume through checkpoints,
+straggler ejection, and deterministic fault injection."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.cluster import (ClusterEvent, ClusterSpec, FaultSchedule,
+                           Membership, rebuild_algorithm)
+from repro.core import registry
+from repro.core.types import DCS3GDConfig
+from repro.launch.engine import Engine, algorithm_for_checkpoint
+from repro.parallel.sharding import validate_worker_count
+
+from helpers import quadratic_problem, stack_batches
+
+CFG = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                   weight_decay=0.0, total_steps=1)
+
+
+def _bitwise(a, b):
+    return all(x.dtype == y.dtype and bool(jnp.all(x == y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _residual_mass(state):
+    """Per-bucket total error-feedback mass, summed in f64 so the check
+    sees resize rounding, not accumulation noise."""
+    return [float(np.sum(np.asarray(r, np.float64)))
+            for r in state.comm["reducer"]["residual"]]
+
+
+def _trained(name, W, steps=5, **kw):
+    loss_fn, init, _, batch_fn = quadratic_problem(n=16)
+    alg = registry.make(name, CFG, n_workers=W, **kw)
+    state = alg.init(init)
+    for t in range(steps):
+        state, _ = alg.step(state, stack_batches(batch_fn, t, W),
+                            loss_fn=loss_fn)
+    return alg, state, loss_fn, batch_fn
+
+
+class _QuadModel:
+    """Minimal Engine model shim around the quadratic problem."""
+
+    cfg = None
+
+    def __init__(self, loss_fn):
+        self._loss = loss_fn
+
+    def loss(self, params, batch):
+        return self._loss(params, batch)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_uniform_and_views():
+    spec = ClusterSpec.uniform(8, pods=2)
+    assert spec.n_workers == 8
+    assert spec.ids == tuple(f"w{i}" for i in range(8))
+    assert spec.pods() == {0: ("w0", "w1", "w2", "w3"),
+                           1: ("w4", "w5", "w6", "w7")}
+    assert spec.index("w5") == 5
+    with pytest.raises(KeyError):
+        spec.index("nope")
+
+
+def test_spec_transitions_are_pure_and_ids_never_reused():
+    spec = ClusterSpec.uniform(4)
+    smaller = spec.without("w1")
+    assert spec.n_workers == 4                  # original untouched
+    assert smaller.ids == ("w0", "w2", "w3")
+    grown = smaller.joined(2)
+    # w1 left: new ids continue from the serial counter, never recycle
+    assert grown.ids == ("w0", "w2", "w3", "w4", "w5")
+    again = grown.without("w4").joined(1)
+    assert again.ids[-1] == "w6"
+
+
+def test_spec_meta_roundtrip():
+    spec = ClusterSpec.uniform(4, pods=2).without("w1").joined(1, pod=1)
+    meta = spec.as_meta()
+    assert meta["ids"] == ["w0", "w2", "w3", "w4"]
+    assert json.loads(json.dumps(meta)) == meta
+
+
+# ---------------------------------------------------------------------------
+# the collapse-to-consensus resize (the tentpole pin)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["dc_s3gd", "ssgd"])
+@pytest.mark.parametrize("w_new", [6, 4])
+def test_resize_pins_consensus_bitwise_and_conserves_residual(algo, w_new):
+    """W=8 -> {6, 4} with buckets=4 and the topk EF reducer: the
+    post-reshard consensus average is BITWISE the pre-resize one (the
+    anchor-form mean makes that exact for any W) and the error-feedback
+    residual mass survives the fold."""
+    red = registry.make_reducer("topk", CFG, density=0.25)
+    alg, state, loss_fn, batch_fn = _trained(algo, 8, reducer=red,
+                                             buckets=4)
+    pre_avg = alg.eval_params(state)
+    pre_mass = _residual_mass(state)
+
+    resized = alg.resize_state(state, w_new)
+    alg2 = rebuild_algorithm(alg, w_new)
+    assert alg2.n_workers == w_new
+
+    assert _bitwise(pre_avg, alg2.eval_params(resized))
+    post_mass = _residual_mass(resized)
+    for a, b in zip(pre_mass, post_mass):
+        assert abs(a - b) <= 1e-5 * max(abs(a), 1.0), (a, b)
+
+    # and training continues at the new W
+    for t in range(5, 8):
+        resized, m = alg2.step(resized, stack_batches(batch_fn, t, w_new),
+                               loss_fn=loss_fn)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_resize_is_a_barrier_workers_restart_identical():
+    """After the resize every worker holds the consensus: DC-S3GD's next
+    distance D_i collapses to ~0 (Algorithm 1 prologue semantics)."""
+    alg, state, loss_fn, batch_fn = _trained("dc_s3gd", 8, buckets=4)
+    resized = alg.resize_state(state, 6)
+    alg2 = rebuild_algorithm(alg, 6)
+    w = resized.params["w"]
+    for i in range(1, 6):
+        assert bool(jnp.all(w[0] == w[i]))
+    _, m = alg2.step(resized, stack_batches(batch_fn, 9, 6),
+                     loss_fn=loss_fn)
+    assert float(m["distance_norm"]) < 1e-6
+
+
+def test_resize_grows_too():
+    """Joiners bootstrap from the consensus: W=4 -> 7 keeps the average
+    bitwise and the momentum identical across all seven rows."""
+    alg, state, _, _ = _trained("dc_s3gd", 4)
+    pre_avg = alg.eval_params(state)
+    resized = alg.resize_state(state, 7)
+    alg2 = rebuild_algorithm(alg, 7)
+    assert _bitwise(pre_avg, alg2.eval_params(resized))
+    m = resized.opt["m"]["w"]
+    assert m.shape[0] == 7
+    assert all(bool(jnp.all(m[0] == m[i])) for i in range(1, 7))
+
+
+def test_resize_staleness_counters_collapse_to_leader():
+    alg, state, loss_fn, batch_fn = _trained("dc_s3gd", 4,
+                                             staleness="dynamic_ssp")
+    state = alg.observe_progress(state, [3, 9, 5, 7])
+    resized = alg.resize_state(state, 3)
+    steps = resized.comm["staleness"]["worker_steps"]
+    assert steps.shape == (3,)
+    assert bool(jnp.all(steps == 9))
+
+
+def test_resize_preserves_randk_counter_and_powersgd_warm_start():
+    for name, carried in (("randk", "step"), ("powersgd", "q")):
+        red = registry.make_reducer(name, CFG, density=0.25) \
+            if name == "randk" else registry.make_reducer(name, CFG, rank=2)
+        alg, state, _, _ = _trained("ssgd", 8, reducer=red, buckets=4)
+        before = state.comm["reducer"][carried]
+        resized = alg.resize_state(state, 6)
+        assert _bitwise(before, resized.comm["reducer"][carried])
+
+
+def test_resize_updates_topk_exact_worker_count():
+    red = registry.make_reducer("topk_exact", CFG, density=0.25)
+    alg, state, _, _ = _trained("ssgd", 8, reducer=red, buckets=4)
+    sizes = [int(n) for n in alg._plan(state.params).bucket_sizes]
+    assert red._n_workers == 8
+    wire8 = red.wire_bytes(sizes)
+    alg.resize_state(state, 4)
+    assert red._n_workers == 4
+    assert red.wire_bytes(sizes) <= wire8
+
+
+def test_membership_rejects_algorithms_without_resize():
+    alg = registry.make("dc_asgd", CFG, n_workers=4)
+    _, init, _, _ = quadratic_problem(n=8)
+    state = alg.init(init)
+    ms = Membership(alg)
+    with pytest.raises(TypeError, match="resize_state"):
+        ms.apply([ClusterEvent("leave", worker="w0")], state, step=0)
+
+
+# ---------------------------------------------------------------------------
+# elastic resume through a checkpoint (same code path as live resize)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["dc_s3gd", "ssgd"])
+@pytest.mark.parametrize("w_new", [6, 4])
+def test_elastic_resume_from_checkpoint(tmp_path, algo, w_new):
+    """W=8 -> checkpoint -> restore -> reshard to {6, 4}: the consensus
+    is bitwise the checkpoint's, residual mass is conserved, and the
+    resumed run trains on."""
+    red = registry.make_reducer("topk", CFG, density=0.25)
+    alg, state, loss_fn, batch_fn = _trained(algo, 8, reducer=red,
+                                             buckets=4)
+    path = tmp_path / "ckpt.npz"
+    Engine(None, alg).save(path, state, step=5)
+
+    restored_alg, resolved = algorithm_for_checkpoint(path, dc_cfg=CFG)
+    assert resolved["n_workers"] == 8 and resolved["buckets"] == 4
+    _, init, _, _ = quadratic_problem(n=16)
+    restored = restore_pytree(path, restored_alg.init(init))
+    assert _bitwise(state, restored)
+
+    pre_avg = restored_alg.eval_params(restored)
+    pre_mass = _residual_mass(restored)
+    resized = restored_alg.resize_state(restored, w_new)
+    alg2 = rebuild_algorithm(restored_alg, w_new)
+    assert _bitwise(pre_avg, alg2.eval_params(resized))
+    for a, b in zip(pre_mass, _residual_mass(resized)):
+        assert abs(a - b) <= 1e-5 * max(abs(a), 1.0), (a, b)
+    for t in range(5, 8):
+        resized, m = alg2.step(resized, stack_batches(batch_fn, t, w_new),
+                               loss_fn=loss_fn)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_worker_mismatch_restore_error_names_the_cure(tmp_path):
+    """Restoring a W=8 checkpoint straight into a W=6 template must not
+    be shape soup: the error points at the elastic-resume path."""
+    alg, state, _, _ = _trained("dc_s3gd", 8, steps=1)
+    path = tmp_path / "w8.npz"
+    Engine(None, alg).save(path, state, step=1)
+    _, init, _, _ = quadratic_problem(n=16)
+    wrong = registry.make("dc_s3gd", CFG, n_workers=6).init(init)
+    with pytest.raises(ValueError, match="worker-count change"):
+        restore_pytree(path, wrong)
+
+
+# ---------------------------------------------------------------------------
+# fault schedules: determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fault_schedule_roundtrip_and_determinism(tmp_path):
+    src = {"seed": 7, "events": [
+        {"step": 2, "kind": "leave"},
+        {"step": 5, "kind": "join", "count": 2, "pod": 1},
+        {"step": 6, "kind": "slowdown", "factor": 8.0, "duration": 3},
+    ]}
+    p = tmp_path / "faults.json"
+    p.write_text(json.dumps(src))
+    a, b = FaultSchedule.from_json(p), FaultSchedule.from_json(src)
+    spec = ClusterSpec.uniform(4)
+    for step in range(10):
+        assert a.membership_events(step, spec) == \
+            b.membership_events(step, spec)
+        assert a.slowdown_factors(step, spec) == \
+            b.slowdown_factors(step, spec)
+    # the random victim at step 2 is pinned by (seed, step)
+    (leave,) = a.membership_events(2, spec)
+    assert leave.kind == "leave" and leave.worker in spec.ids
+
+
+def test_fault_schedule_victim_gone_is_dropped():
+    fs = FaultSchedule.from_json(
+        {"events": [{"step": 3, "kind": "leave", "worker": "w1"}]})
+    spec = ClusterSpec.uniform(4).without("w1")
+    assert fs.membership_events(3, spec) == []
+    assert fs.slowdown_factors(3, spec) is None
+
+
+def test_slowdown_factors_follow_spec_order():
+    fs = FaultSchedule.from_json(
+        {"events": [{"step": 0, "kind": "slowdown", "worker": "w2",
+                     "factor": 4.0, "duration": 2}]})
+    spec = ClusterSpec.uniform(3)
+    assert fs.slowdown_factors(0, spec) == [1.0, 1.0, 4.0]
+    assert fs.slowdown_factors(1, spec) == [1.0, 1.0, 4.0]
+    assert fs.slowdown_factors(2, spec) is None
+
+
+# ---------------------------------------------------------------------------
+# live elastic training through Engine.fit
+# ---------------------------------------------------------------------------
+
+
+def _elastic_fit(schedule, *, W=4, steps=12, staleness="fixed",
+                 measure=False, probe=None, eject=None, seed_problem=0,
+                 buckets=0, reducer=None, **fit_kw):
+    loss_fn, init, _, batch_fn = quadratic_problem(n=12, seed=seed_problem)
+    kw = {"staleness": staleness, "buckets": buckets}
+    if reducer is not None:
+        kw["reducer"] = reducer
+    alg = registry.make("dc_s3gd", CFG, n_workers=W, **kw)
+    faults = FaultSchedule.from_json(schedule) if schedule else None
+    ms = Membership(alg, faults=faults, eject_threshold=eject,
+                    eject_patience=2)
+    engine = Engine(_QuadModel(loss_fn), alg)
+    state, history, _ = engine.fit(
+        alg.init(init),
+        lambda t, n: stack_batches(batch_fn, t, n),
+        steps=steps, log_every=1, verbose=False, membership=ms,
+        measure_skew=measure, skew_probe=probe, **fit_kw)
+    return ms, state, history
+
+
+def test_fit_live_leave_and_join():
+    """A scripted leave then join mid-run: worker counts track the
+    membership, the consensus survives each barrier, loss stays finite."""
+    ms, state, history = _elastic_fit(
+        {"events": [{"step": 3, "kind": "leave", "worker": "w1"},
+                    {"step": 7, "kind": "join", "count": 1}]},
+        W=4, steps=10, staleness="dynamic_ssp", buckets=4,
+        reducer=registry.make_reducer("topk", CFG, density=0.25))
+    assert [e["kind"] for e in ms.log] == ["leave", "join"]
+    assert ms.spec.ids == ("w0", "w2", "w3", "w4")
+    assert state.params["w"].shape[0] == 4
+    assert [h["n_workers"] for h in history] == [4, 4, 4, 3, 3, 3, 3,
+                                                 4, 4, 4]
+    assert all(jnp.isfinite(h["loss"]) for h in history)
+    # staleness counters followed the membership through both resizes
+    assert state.comm["staleness"]["worker_steps"].shape == (4,)
+
+
+def test_fit_same_count_swap_still_applies_barrier():
+    """leave+join in one boundary (same W): the joiner must bootstrap
+    from consensus, not inherit the leaver's row — all rows equal right
+    after the swap."""
+    ms, state, _ = _elastic_fit(
+        {"events": [{"step": 4, "kind": "leave", "worker": "w0"},
+                    {"step": 4, "kind": "join", "count": 1}]},
+        W=3, steps=5)
+    assert ms.spec.ids == ("w1", "w2", "w3")
+    assert len(ms.log) == 2
+
+
+def test_fit_ejects_persistent_straggler():
+    """A worker measured 4x slower past the skew threshold for
+    eject_patience consecutive steps is ejected; the run continues at
+    W-1 with finite loss (under the stateless fixed policy — ejection
+    does not require dynamic_ssp)."""
+    held = {"ms": None}
+
+    def probe(it, dt):
+        ms = held["ms"]
+        durs = [dt] * ms.n_workers
+        if "w0" in ms.spec.ids:
+            durs[ms.spec.index("w0")] = 4 * dt
+        return durs
+
+    loss_fn, init, _, batch_fn = quadratic_problem(n=12)
+    alg = registry.make("dc_s3gd", CFG, n_workers=4)
+    ms = Membership(alg, eject_threshold=2.0, eject_patience=2)
+    held["ms"] = ms
+    engine = Engine(_QuadModel(loss_fn), alg)
+    state, history, _ = engine.fit(
+        alg.init(init), lambda t, n: stack_batches(batch_fn, t, n),
+        steps=10, log_every=1, verbose=False, membership=ms,
+        measure_skew=True, skew_probe=probe)
+    assert [e["kind"] for e in ms.log] == ["eject"]
+    assert ms.log[0]["worker"] == "w0"
+    assert "lag" in ms.log[0]["reason"]
+    assert ms.n_workers == 3
+    assert state.params["w"].shape[0] == 3
+    assert all(jnp.isfinite(h["loss"]) for h in history)
+
+
+def test_fit_ejection_respects_min_workers():
+    """With min_workers == W the policy may never eject."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=12)
+    alg = registry.make("dc_s3gd", CFG, n_workers=2)
+    ms = Membership(alg, eject_threshold=1.0, eject_patience=1,
+                    min_workers=2)
+    engine = Engine(_QuadModel(loss_fn), alg)
+    engine.fit(alg.init(init),
+               lambda t, n: stack_batches(batch_fn, t, n),
+               steps=6, log_every=1, verbose=False, membership=ms,
+               measure_skew=True,
+               skew_probe=lambda it, dt: [4 * dt, dt])
+    assert ms.log == []
+    assert ms.n_workers == 2
+
+
+def test_fit_transition_log_is_deterministic():
+    """Same seeded schedule, two fresh runs -> identical transition logs
+    (the CI elastic smoke's acceptance criterion)."""
+    schedule = {"seed": 11, "events": [
+        {"step": 3, "kind": "leave"},
+        {"step": 6, "kind": "join", "count": 1},
+        {"step": 8, "kind": "slowdown", "factor": 16.0, "duration": 6},
+    ]}
+    logs = []
+    for _ in range(2):
+        ms, _, history = _elastic_fit(schedule, W=4, steps=16,
+                                      measure=True, eject=3.0)
+        logs.append(ms.log)
+        assert all(jnp.isfinite(h["loss"]) for h in history)
+    assert logs[0] == logs[1]
+    kinds = [e["kind"] for e in logs[0]]
+    assert kinds[:2] == ["leave", "join"]
+    assert "eject" in kinds   # the scripted slowdown trips the policy
+
+
+# ---------------------------------------------------------------------------
+# measured-skew compile-spike exclusion (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def _spiky_probe(W, spike=200.0):
+    """Per-worker measured durations whose step-0 sample is polluted by
+    an asymmetric compile spike (worker 0 hosts the compilation) —
+    steady state is perfectly lockstep."""
+    def probe(it, dt):
+        if it == 0:
+            return [spike] + [1.0] * (W - 1)
+        return [1.0] * W
+    return probe
+
+
+def test_skew_warmup_excludes_compile_spike():
+    """Lockstep workers with a huge first measured step must measure ZERO
+    steady-state skew — the spike is compilation, not heterogeneity —
+    and dynamic_ssp must never revoke."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+    cfg = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                       total_steps=1, ssp_threshold=2)
+    W = 4
+    alg = registry.make("dc_s3gd", cfg, n_workers=W,
+                        staleness="dynamic_ssp")
+    engine = Engine(_QuadModel(loss_fn), alg)
+    _, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, W),
+        steps=6, log_every=1, verbose=False, measure_skew=True,
+        skew_probe=_spiky_probe(W))
+    assert all(h["measured_skew"] == 0 for h in history), history
+    assert all(h["ssp_admit"] == 1.0 for h in history), history
+
+
+def test_skew_warmup_zero_shows_the_pollution():
+    """Control for the regression above: with the warmup disabled the
+    same spike floods the virtual clock and revokes the window — the
+    behaviour the fix removes."""
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+    cfg = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                       total_steps=1, ssp_threshold=2)
+    W = 4
+    alg = registry.make("dc_s3gd", cfg, n_workers=W,
+                        staleness="dynamic_ssp")
+    engine = Engine(_QuadModel(loss_fn), alg)
+    _, history, _ = engine.fit(
+        alg.init(init), lambda t: stack_batches(batch_fn, t, W),
+        steps=6, log_every=1, verbose=False, measure_skew=True,
+        skew_probe=_spiky_probe(W), skew_warmup=0)
+    assert max(h["measured_skew"] for h in history) > 2
+    assert 0.0 in [h["ssp_admit"] for h in history]
+
+
+# ---------------------------------------------------------------------------
+# worker-count validation at Engine construction (satellite)
+# ---------------------------------------------------------------------------
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in: single-device CI cannot build a real
+    multi-device mesh, and the validator only reads names + sizes."""
+
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+
+
+def test_validate_worker_count_errors_are_clear():
+    with pytest.raises(ValueError) as e:
+        validate_worker_count(6, _FakeMesh(data=4, model=1))
+    msg = str(e.value)
+    assert "n_workers=6" in msg and "4" in msg and "data" in msg
+    # fine: divisible, mesh-less, or count-less
+    validate_worker_count(8, _FakeMesh(data=4, model=1))
+    validate_worker_count(6, None)
+    validate_worker_count(None, _FakeMesh(data=4, model=1))
+    validate_worker_count(6, _FakeMesh(pod=2, data=3, model=2))
+
+
+def test_engine_construction_validates_worker_count():
+    alg = registry.make("dc_s3gd", CFG, n_workers=6)
+    with pytest.raises(ValueError, match="n_workers=6"):
+        Engine(None, alg, mesh=_FakeMesh(data=4, model=1))
+    Engine(None, alg)   # mesh=None smoke path unaffected
