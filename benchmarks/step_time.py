@@ -19,6 +19,15 @@ bucketed rows, exact leaf sizes per-leaf), ``wire_compression`` the
 dense/compressed ratio, so the file shows the compression win, not just
 ms/step (Dynamic-SSP's lesson: measure per-step cost, don't assume it).
 
+Two more columns per row: ``kernel_mode`` reports whether the Pallas
+bodies actually compiled ("compiled": a Mosaic custom-call appears in
+the lowering) or run interpreted ("interpret" — CPU CI; ``null`` when
+``use_kernels`` is off), so perf gates compare like-for-like; and every
+stale-family bucketed row is re-timed with the
+`repro.parallel.pipeline` double-buffered schedule
+(``overlap_ms_per_step`` / ``overlap_ms_saved``; ``null`` for ssgd and
+per-leaf rows, which have no bucket pipeline to stage).
+
 Step times are measured with buffer donation in effect (the Engine's
 jitted step donates the TrainState), so the numbers include the
 zero-copy state reuse the bucketed path is designed around.
@@ -56,19 +65,29 @@ SMOKE_JSON_NAME = "BENCH_step_time.smoke.json"
 
 
 def _build(algo: str, reducer: str, use_kernels: bool, buckets: int,
-           model, n_workers: int, steps: int):
+           model, n_workers: int, steps: int, overlap: bool = False):
     from repro.core import registry
     from repro.core.types import DCS3GDConfig
     cfg = DCS3GDConfig(learning_rate=0.05, momentum=0.9, lambda0=0.2,
                        warmup_steps=1, total_steps=max(steps, 2))
     return registry.make(algo, cfg, n_workers=n_workers, reducer=reducer,
-                         use_kernels=use_kernels, buckets=buckets)
+                         use_kernels=use_kernels, buckets=buckets,
+                         overlap=overlap)
 
 
-def _hlo_counts(step_fn, state, batch) -> dict:
+def _hlo_counts(step_fn, state, batch, *, use_kernels: bool) -> dict:
     txt = step_fn.lower(state, batch).as_text()
+    # kernel_mode comes from the ACTUAL lowering, not the flag: a Mosaic
+    # custom-call in the stablehlo means the Pallas bodies compiled for
+    # the accelerator; their absence under use_kernels means the
+    # interpreter path (CPU CI) — gates must compare like-for-like
+    mode = None
+    if use_kernels:
+        mode = ("compiled" if ("tpu_custom_call" in txt or "mosaic" in txt)
+                else "interpret")
     return {"hlo_reduce_ops": txt.count("stablehlo.reduce"),
-            "hlo_convert_ops": txt.count("stablehlo.convert")}
+            "hlo_convert_ops": txt.count("stablehlo.convert"),
+            "kernel_mode": mode}
 
 
 def _wire_columns(alg, algo: str, state) -> dict:
@@ -106,29 +125,43 @@ def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
     from repro.data import worker_batches
     from repro.launch.engine import Engine
 
-    alg = _build(algo, reducer, use_kernels, buckets, model, n_workers,
-                 steps)
-    engine = Engine(model, alg)
-    state = engine.init_state(jax.random.PRNGKey(0))
-    step_fn = engine.jit_train_step()
-    counts = _hlo_counts(step_fn, state,
-                         worker_batches(data, 0, n_workers,
-                                        batch_per_worker))
-    counts.update(_wire_columns(alg, algo, state))
-    for it in range(warmup):
-        state, metrics = step_fn(state,
-                                 worker_batches(data, it, n_workers,
-                                                batch_per_worker))
-    jax.block_until_ready(metrics)
-    t0 = time.perf_counter()
-    for it in range(warmup, warmup + steps):
-        state, metrics = step_fn(state,
-                                 worker_batches(data, it, n_workers,
-                                                batch_per_worker))
-    jax.block_until_ready((state, metrics))
-    ms = (time.perf_counter() - t0) / steps * 1e3
+    def run(overlap: bool):
+        alg = _build(algo, reducer, use_kernels, buckets, model,
+                     n_workers, steps, overlap)
+        engine = Engine(model, alg)
+        state = engine.init_state(jax.random.PRNGKey(0))
+        step_fn = engine.jit_train_step()
+        counts = _hlo_counts(step_fn, state,
+                             worker_batches(data, 0, n_workers,
+                                            batch_per_worker),
+                             use_kernels=use_kernels)
+        counts.update(_wire_columns(alg, algo, state))
+        for it in range(warmup):
+            state, metrics = step_fn(state,
+                                     worker_batches(data, it, n_workers,
+                                                    batch_per_worker))
+        jax.block_until_ready(metrics)
+        t0 = time.perf_counter()
+        for it in range(warmup, warmup + steps):
+            state, metrics = step_fn(state,
+                                     worker_batches(data, it, n_workers,
+                                                    batch_per_worker))
+        jax.block_until_ready((state, metrics))
+        return (time.perf_counter() - t0) / steps * 1e3, counts
+
+    ms, counts = run(overlap=False)
+    # the pipelined (double-buffered) schedule only exists over the
+    # bucketed wire of the stale-family algorithms — ssgd's blocking
+    # all-reduce has nothing to overlap (see repro.parallel.pipeline)
+    overlap_ms = None
+    if algo != "ssgd" and buckets:
+        overlap_ms, _ = run(overlap=True)
     return {"algo": algo, "reducer": reducer, "use_kernels": use_kernels,
             "buckets": buckets, "ms_per_step": round(ms, 3),
+            "overlap_ms_per_step":
+                None if overlap_ms is None else round(overlap_ms, 3),
+            "overlap_ms_saved":
+                None if overlap_ms is None else round(ms - overlap_ms, 3),
             "steps": steps, **counts}
 
 

@@ -44,7 +44,7 @@ def rebuild_algorithm(alg, n_new: int):
     for attr in ("local_optimizer", "reducer", "compensator", "staleness"):
         if hasattr(alg, attr):
             kw[attr] = getattr(alg, attr)
-    for attr in ("use_kernels", "buckets"):
+    for attr in ("use_kernels", "buckets", "overlap"):
         if hasattr(alg, attr):
             kw[attr] = getattr(alg, attr)
     from repro.core import registry
@@ -60,13 +60,21 @@ class Membership:
                      eject fires — one slow step is a revoke's job, not
                      an ejection's;
     min_workers      the policy never ejects below this count (scripted
-                     leaves still obey their script, floored at 1).
+                     leaves still obey their script, floored at 1);
+    dense_after_join joiner catch-up under compression: after a join, a
+                     stateful (error-feedback) reducer is wrapped in
+                     `repro.core.compress.DenseWindowReduce` for this
+                     many steps — the first dense step delivers the
+                     joiner's inherited residual exactly (residual -> 0)
+                     instead of draining it through the compressor over
+                     many low-density steps.  0 disables the window.
     """
 
     def __init__(self, alg, spec: Optional[ClusterSpec] = None, *,
                  faults: Optional[FaultSchedule] = None,
                  eject_threshold: Optional[float] = None,
-                 eject_patience: int = 3, min_workers: int = 2):
+                 eject_patience: int = 3, min_workers: int = 2,
+                 dense_after_join: int = 0):
         self.alg = alg
         self.spec = spec if spec is not None else \
             ClusterSpec.uniform(getattr(alg, "n_workers", 1))
@@ -76,9 +84,11 @@ class Membership:
         self.eject_threshold = eject_threshold
         self.eject_patience = int(eject_patience)
         self.min_workers = int(min_workers)
+        self.dense_after_join = int(dense_after_join)
         self.log: List[dict] = []
         self._streak: dict = {}
         self._pending: List[ClusterEvent] = []
+        self._dense_until: Optional[int] = None
 
     @property
     def n_workers(self) -> int:
@@ -91,6 +101,11 @@ class Membership:
         (decided on the previous step's measurements), then the fault
         schedule's scripted events."""
         events, self._pending = self._pending, []
+        if self._dense_until is not None and step >= self._dense_until:
+            # synthetic event: the joiner catch-up window has elapsed —
+            # `apply` restores the wrapped compressed reducer (re-jit
+            # only; the carried reducer state keeps its pytree structure)
+            events.append(ClusterEvent("dense_end", reason="window elapsed"))
         if self.faults is not None:
             events += self.faults.membership_events(step, self.spec)
         return events
@@ -136,6 +151,19 @@ class Membership:
         apply to EVERY membership change, including a same-count
         leave+join pair: the joiner must bootstrap from the consensus,
         never inherit the leaver's row."""
+        from repro.core.compress import DenseWindowReduce
+        swapped = False
+        dense_end = [ev for ev in events if ev.kind == "dense_end"]
+        events = [ev for ev in events if ev.kind != "dense_end"]
+        if dense_end:
+            self._dense_until = None
+        if dense_end and isinstance(getattr(self.alg, "reducer", None),
+                                    DenseWindowReduce):
+            self.alg.reducer = self.alg.reducer.inner
+            swapped = True
+            self.log.append({"step": int(step), "kind": "dense_window_end",
+                             "worker": "", "reason": "window elapsed",
+                             "n_workers": self.spec.n_workers})
         spec = self.spec
         for ev in events:
             if ev.kind in ("leave", "eject"):
@@ -161,7 +189,7 @@ class Membership:
         mutated = spec.ids != self.spec.ids
         self.spec = spec
         if not mutated:
-            return state, False
+            return state, swapped
         if not hasattr(self.alg, "resize_state"):
             raise TypeError(
                 f"algorithm {self.alg.name!r} has no resize_state hook — "
@@ -169,4 +197,17 @@ class Membership:
                 f"DistributedOptimizer contract in repro.core.api)")
         state = self.alg.resize_state(state, n_new)
         self.alg = rebuild_algorithm(self.alg, n_new)
+        if (self.dense_after_join > 0
+                and any(ev.kind == "join" for ev in events)
+                and not getattr(self.alg.reducer, "stateless", True)):
+            # joiner catch-up: swap in the dense window (re-jit-only — the
+            # carried reducer state keeps the inner reducer's structure)
+            if not isinstance(self.alg.reducer, DenseWindowReduce):
+                self.alg.reducer = DenseWindowReduce(self.alg.reducer)
+            self._dense_until = int(step) + self.dense_after_join
+            self.log.append({"step": int(step),
+                             "kind": "dense_window_start", "worker": "",
+                             "reason": f"dense_after_join="
+                                       f"{self.dense_after_join}",
+                             "n_workers": n_new})
         return state, True

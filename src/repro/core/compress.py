@@ -97,6 +97,86 @@ def _mean_over_workers(c: jnp.ndarray, dt) -> jnp.ndarray:
         .astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# fast per-row magnitude threshold (the top-k selection without the sort)
+# ---------------------------------------------------------------------------
+
+# buckets up to one BLOCK (32768 elements) keep the exact jax.lax.top_k
+# threshold: at that size the sort is cheap and exactness is free.  Above
+# it, a full sort/top_k of a multi-megabyte bucket costs ~100x the rest
+# of the error-feedback body (the compression cliff BENCH_step_time.json
+# exposed), so large buckets switch to the bit-space search below.
+EXACT_TOPK_MAX = 32768
+
+
+def _search_hi15(hi: jnp.ndarray, k) -> jnp.ndarray:
+    """Largest 15-bit t with ``count(hi >= t) >= k`` per row, by binary
+    search on the bit values themselves (15 counting passes)."""
+    def body(i, t):
+        cand = (t | (jnp.int16(1) << (14 - i))).astype(jnp.int16)
+        cnt = jnp.sum(hi >= cand, axis=-1, keepdims=True)
+        return jnp.where(cnt >= k, cand, t).astype(jnp.int16)
+    return jax.lax.fori_loop(
+        0, 15, body, jnp.zeros(hi.shape[:-1] + (1,), jnp.int16))
+
+
+def _coarse_hi15(mag: jnp.ndarray, k: int) -> jnp.ndarray:
+    """The k-th largest value of ``hi = bits(|x|) >> 16`` per row.
+
+    Non-negative f32s order like their int32 bit patterns, so the top 15
+    bits (sign dropped — magnitudes are non-negative) order the values
+    up to low-mantissa ties.  Exact bracketing is guaranteed, cheaply:
+    a 1/16-strided subsample estimates the answer with a full 15-pass
+    search on ~6% of the data, a 5-pass windowed search around the
+    estimate refines it on the full rows, and a validity check
+    (``count(hi >= t) >= k`` and ``count(hi > t) < k``) falls back to
+    the full-row 15-pass search via ``lax.cond`` when the subsample was
+    unlucky — the result is always the true k-th hi-value."""
+    hi = jax.lax.optimization_barrier(
+        (mag.view(jnp.int32) >> 16).astype(jnp.int16))
+    sub = hi[..., ::16]
+    ks = max(1, (k * sub.shape[-1]) // hi.shape[-1])
+    h_est = _search_hi15(sub, ks).astype(jnp.int32)
+    lo_w = jnp.clip(h_est - 8, 0, 0x7FFF)
+
+    def wbody(i, off):
+        o2 = off | (1 << (4 - i))
+        cand = (lo_w + o2).astype(jnp.int16)
+        cnt = jnp.sum(hi >= cand, axis=-1, keepdims=True)
+        return jnp.where((cnt >= k) & (lo_w + o2 <= 0x7FFF), o2, off)
+
+    off = jax.lax.fori_loop(0, 5, wbody,
+                            jnp.zeros(hi.shape[:-1] + (1,), jnp.int32))
+    t_w = jnp.clip(lo_w + off, 0, 0x7FFF).astype(jnp.int16)
+    ge = jnp.sum(hi >= t_w, axis=-1, keepdims=True)
+    gt = jnp.sum(hi > t_w, axis=-1, keepdims=True)
+    valid = jnp.all((ge >= k) & (gt < k))
+    return jax.lax.cond(valid, lambda: t_w, lambda: _search_hi15(hi, k))
+
+
+def magnitude_threshold(mag: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row threshold t with ``|{x : mag >= t}| >= k`` and magnitude
+    dominance (every kept magnitude >= t > every dropped one).
+
+    ``mag`` is (..., n) non-negative f32.  For ``n <= EXACT_TOPK_MAX``
+    this is the exact ``jax.lax.top_k`` k-th value (``>=`` keeps exactly
+    the top-k up to ties, matching the original selection bitwise).
+    Larger rows use the coarse bit threshold ``t = f32(hi_k << 16)`` —
+    the smallest float whose top bits equal the true k-th value's: at
+    least k elements are selected, dominance holds, and the overshoot is
+    confined to low-mantissa ties of the k-th value (measured < 0.1% of
+    k on gradient-like data).  Cost: ~20 counting passes instead of a
+    full sort — the difference between ~18 ms and ~950 ms per step on
+    the CI bench wire."""
+    n = mag.shape[-1]
+    if k >= n:
+        return jnp.zeros(mag.shape[:-1] + (1,), mag.dtype)
+    if n <= EXACT_TOPK_MAX:
+        return jax.lax.top_k(mag, k)[0][..., -1:]
+    t15 = _coarse_hi15(mag, k)
+    return (t15.astype(jnp.int32) << 16).view(jnp.float32)
+
+
 class _ErrorFeedbackMean:
     """Shared skeleton: accumulate residual -> compress -> mean -> carry
     what was dropped.  Subclasses implement ``_compress(a, key)`` (the
@@ -104,6 +184,10 @@ class _ErrorFeedbackMean:
 
     reduces_weights = False
     stateless = False
+    # the owning algorithm flips this under use_kernels; subclasses with
+    # a fused Pallas body (topk / topk_exact) then route whole buckets
+    # through one select+pack+residual launch (repro.kernels.compress)
+    use_kernels = False
 
     def __init__(self, cfg=None, *, comm_dtype: str | None = None):
         self.comm_dtype = comm_dtype if comm_dtype is not None else \
@@ -132,12 +216,23 @@ class _ErrorFeedbackMean:
             # error feedback: what compression dropped last step re-enters
             # the payload before this step's selection
             a = d.astype(jnp.float32) + rstate["residual"][b]
-            c = self._compress(b, a, rstate)
-            out.append(_mean_over_workers(c, dt))
-            new_res.append(a - c)
+            fused = self._fused_bucket(b, a, dt) if self.use_kernels \
+                else None
+            if fused is not None:
+                o, r = fused
+            else:
+                c = self._compress(b, a, rstate)
+                o, r = _mean_over_workers(c, dt), a - c
+            out.append(o)
+            new_res.append(r)
         new_state = dict(rstate)
         new_state["residual"] = new_res
         return out, self._advance(new_state)
+
+    def _fused_bucket(self, b: int, a: jnp.ndarray, dt):
+        """Optional fused Pallas body for one accumulated bucket ``a``:
+        return ``(mean, new_residual)`` or None to take the XLA path."""
+        return None
 
     def revoke(self, wire, prev_rstate: PyTree, rstate: PyTree) -> PyTree:
         """Carried state for a step whose reduction output was NOT
@@ -187,13 +282,24 @@ class _ErrorFeedbackMean:
 class TopKReduce(_ErrorFeedbackMean):
     """Magnitude top-k sparsified mean: each worker keeps the
     ``density`` fraction of largest-|.| coordinates of each bucket
-    (threshold from `jax.lax.top_k`, ``>=`` so ties never drop below k)
-    and the mean is taken over the sparse payloads.
+    (threshold via `magnitude_threshold`: exact ``jax.lax.top_k`` for
+    buckets up to `EXACT_TOPK_MAX`, the coarse bit-search threshold —
+    at least k kept, magnitude dominance — above it; ``>=`` so ties
+    never drop below k) and the mean is taken over the sparse payloads.
 
-    Wire: k values in ``comm_dtype`` + k int32 coordinates per bucket —
-    every worker selects its own support, so indices must travel."""
+    Wire: ~k values in ``comm_dtype`` + ~k int32 coordinates per bucket
+    — every worker selects its own support, so indices must travel.
+    ``wire_bytes`` reports the nominal k; the coarse threshold's tie
+    overshoot is a sub-percent correction.
+
+    Under ``use_kernels`` the per-bucket select + wire cast + mean +
+    error-feedback residual update run as ONE Pallas row-grid launch
+    (`repro.kernels.compress.select_ef_mean`) instead of four XLA
+    passes; the threshold search stays in XLA (it is a reduction, not
+    an elementwise pass)."""
 
     name = "topk"
+    _union = False  # per-worker supports; topk_exact means on the union
 
     def __init__(self, cfg=None, *, comm_dtype: str | None = None,
                  density: float | None = None):
@@ -214,8 +320,17 @@ class TopKReduce(_ErrorFeedbackMean):
                   ) -> jnp.ndarray:
         k = _k_of(a.shape[-1], self.density)
         mag = jnp.abs(a)
-        thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+        thresh = magnitude_threshold(mag, k)
         return jnp.where(mag >= thresh, a, 0.0)
+
+    def _fused_bucket(self, b: int, a: jnp.ndarray, dt):
+        from repro.kernels import compress as kc
+        if a.shape[-1] % kc.BLOCK:
+            return None  # tiny/unaligned test buckets: XLA path
+        k = _k_of(a.shape[-1], self.density)
+        thresh = magnitude_threshold(jnp.abs(a), k)
+        return kc.select_ef_mean(a, thresh, comm_dtype=dt,
+                                 union=self._union)
 
 
 @registry.register(registry.REDUCER, "topk_exact")
@@ -233,9 +348,15 @@ class TopKExactReduce(TopKReduce):
     to ``min(W·k, n)`` values in ``comm_dtype`` (the union payload) —
     a second exchange round and up to W× the value volume of gather-free
     ``topk``, bought for an unbiased-on-support mean with no per-
-    coordinate scaling correction."""
+    coordinate scaling correction.
+
+    "Exact" refers to the mean *on the union support* — which holds for
+    any per-worker selection rule, so large buckets share `TopKReduce`'s
+    coarse threshold (the union is then >= the exact-top-k union, and
+    the mean on it is still the exact dense mean restricted to it)."""
 
     name = "topk_exact"
+    _union = True
 
     def init(self, n_workers: int, plan) -> PyTree:
         self._n_workers = int(n_workers)
@@ -266,7 +387,7 @@ class TopKExactReduce(TopKReduce):
                   ) -> jnp.ndarray:
         k = _k_of(a.shape[-1], self.density)
         mag = jnp.abs(a)
-        thresh = jax.lax.top_k(mag, k)[0][..., -1:]
+        thresh = magnitude_threshold(mag, k)
         union = jnp.any(mag >= thresh, axis=0, keepdims=True)
         # every worker contributes its TRUE value on the union support,
         # so `_mean_over_workers` is the exact mean there
@@ -408,4 +529,51 @@ class PowerSGDReduce(_ErrorFeedbackMean):
         new_state = dict(rstate)
         new_state["residual"] = new_res
         new_state["q"] = new_q
+        return out, new_state
+
+
+class DenseWindowReduce:
+    """Temporarily-dense wrapper around a stateful EF reducer — the
+    joiner catch-up window of ``Membership(dense_after_join=N)``.
+
+    A worker joining an elastic run inherits its residual row from the
+    mass-conserving resize fold (`_ErrorFeedbackMean.resize`): a share
+    of everything compression has not yet delivered.  Draining that
+    inherited backlog through the compressor takes many steps at low
+    density; during the window this wrapper instead delivers it *now*:
+
+        a = wire + residual  ->  exact dense mean of a  ->  residual = 0
+
+    — one step on the dense wire and the inherited residual has
+    re-contracted to exactly zero (pinned in ``tests/test_cluster.py``).
+    The carried state keeps the inner reducer's exact pytree structure
+    (residual zeroed, counters/warm starts untouched — randk's shared
+    step counter freezes for the window, identically on every worker),
+    so the swap is re-jit-only: no state surgery, and
+    `repro.cluster.Membership` restores the inner reducer after N
+    steps.  Everything else (``hparams``, ``wire_bytes``, ``resize``,
+    ``revoke``, ``state_specs``) delegates to the wrapped reducer; a
+    checkpoint written mid-window records the inner reducer and resumes
+    compressed."""
+
+    stateless = False
+    reduces_weights = False
+
+    def __init__(self, inner):
+        self.inner = inner
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def __call__(self, wire, rstate: PyTree) -> Tuple[List[jnp.ndarray],
+                                                      PyTree]:
+        buckets = _as_buckets(wire)
+        dt = jnp.dtype(self.inner.comm_dtype)
+        out, new_res = [], []
+        for b, d in enumerate(buckets):
+            a = d.astype(jnp.float32) + rstate["residual"][b]
+            out.append(_mean_over_workers(a, dt))
+            new_res.append(jnp.zeros_like(a))
+        new_state = dict(rstate)
+        new_state["residual"] = new_res
         return out, new_state

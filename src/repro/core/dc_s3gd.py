@@ -95,7 +95,8 @@ class DCS3GD:
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None, compensator=None,
                  staleness=None, use_kernels: bool = False,
-                 buckets: Optional[int] = None):
+                 buckets: Optional[int] = None,
+                 overlap: Optional[bool] = None):
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -108,10 +109,22 @@ class DCS3GD:
         self.staleness = registry.make_staleness_policy(
             "fixed" if staleness is None else staleness, cfg)
         self.use_kernels = use_kernels
+        # compressed reducers with a fused Pallas body share the knob:
+        # one flag routes both the tail and the compression through kernels
+        if use_kernels and hasattr(self.reducer, "use_kernels"):
+            self.reducer.use_kernels = True
         # flat-buffer comm bucketing (repro.parallel.buckets): >0 packs the
         # wire state + fused tail into that many contiguous buckets; 0 is
         # the legacy per-leaf path
         self.buckets = int(cfg.buckets if buckets is None else buckets)
+        # double-buffered bucket pipeline (repro.parallel.pipeline): issue
+        # the next reduce at the end of each step, consume the landed one
+        # at the top — bitwise the inline schedule, structurally overlapped
+        self.overlap = bool(overlap or False)
+        if self.overlap:
+            from repro.parallel import pipeline as PL
+            PL.validate(buckets=self.buckets, reducer=self.reducer,
+                        staleness=self.staleness)
         self._plan_cache: dict = {}
 
     # -- protocol -----------------------------------------------------------
@@ -158,6 +171,19 @@ class DCS3GD:
         if not self._reducer_stateless:
             comm["reducer"] = self.reducer.init(
                 self.n_workers, self._plan(wp) if self.buckets else None)
+        if self.overlap:
+            # prime the pipeline: issue the reduce of the zero payload
+            # (resp. the packed initial weights) — exactly the call the
+            # inline schedule makes on step 0, so step 0 consumes the
+            # same landed value either way (Algorithm 1's prologue)
+            from repro.parallel import pipeline as PL
+            wire0 = self._plan(wp).pack(wp) if self._reduces_weights \
+                else comm["delta_prev"]
+            pl_state, rs = PL.issue(self.reducer, wire0,
+                                    comm.get("reducer"))
+            comm["pipeline"] = pl_state
+            if rs is not None:
+                comm["reducer"] = rs
         return TrainState(params=wp, opt=opt, comm=comm,
                           step=jnp.zeros((), jnp.int32))
 
@@ -186,22 +212,57 @@ class DCS3GD:
         # reducers additionally consume and return their carried
         # comm["reducer"] state (error-feedback residuals).
         rstate = None
-        if self._reduces_weights:
+        if self.overlap:
+            # pipelined schedule: the reduction was issued at the END of
+            # the previous step's program (repro.parallel.pipeline) — this
+            # step only CONSUMES the landed buffers; the next issue happens
+            # in `_comm` at the tail.  Same reducer calls on the same
+            # inputs as the inline branch below, just staged one program
+            # region earlier -> bitwise-equal trajectory.
+            from repro.parallel import pipeline as PL
+            landed = PL.landed(state.comm)
+            if self._reduces_weights:
+                wire = plan.pack(state.params)
+                r_in = wire
+                w_red = landed
+            else:
+                delta_prev = state.comm["delta_prev"]
+                r_in = delta_prev
+                delta_bar = landed
+        elif self._reduces_weights:
             wire = plan.pack(state.params) if plan is not None \
                 else state.params
             r_in = wire
+            # fence the reduce input exactly like the pipelined issue does
+            # (repro.parallel.pipeline.issue): with both ends fenced the
+            # reduce is an isolated subgraph, compiled identically whether
+            # it sits at the top of this step or the tail of the previous
+            # one — the bitwise-equal-schedules guarantee rests on this
+            fenced = jax.lax.optimization_barrier(wire)
             if self._reducer_stateless:
-                w_red = self.reducer(wire)
+                w_red = self.reducer(fenced)
             else:
-                w_red, rstate = self.reducer(wire, state.comm["reducer"])
+                w_red, rstate = self.reducer(fenced, state.comm["reducer"])
         else:
             delta_prev = state.comm["delta_prev"]   # bucketed when buckets>0
             r_in = delta_prev
+            fenced = jax.lax.optimization_barrier(delta_prev)
             if self._reducer_stateless:
-                delta_bar = self.reducer(delta_prev)
+                delta_bar = self.reducer(fenced)
             else:
-                delta_bar, rstate = self.reducer(delta_prev,
+                delta_bar, rstate = self.reducer(fenced,
                                                  state.comm["reducer"])
+
+        # --- MPI_Wait materializes a landed buffer: fence the reduction
+        # so XLA cannot fuse its final ops into consumer arithmetic (FMA
+        # across the seam) — otherwise the inline and pipelined schedules
+        # differ at the last ulp for reducers ending in multiplies
+        # (gossip's weighted neighbor sums).  No-op for the pipelined
+        # branch, whose landed value is already a program input.
+        if self._reduces_weights:
+            w_red = jax.lax.optimization_barrier(w_red)
+        else:
+            delta_bar = jax.lax.optimization_barrier(delta_bar)
 
         # --- g_i = ∇l(w_i): per-worker gradients (the compute overlapped)
         grads, loss = _vgrads(loss_fn, state.params, batch, cfg.microbatches)
@@ -216,6 +277,10 @@ class DCS3GD:
         else:
             D = jax.tree.map(lambda db, d: db - d.astype(jnp.float32),
                              delta_bar, delta_prev)
+        # fence D as well: downstream reductions (the compensator's Eq. 17
+        # norms) must see a materialized buffer so their codegen cannot
+        # depend on which program region produced the reduction
+        D = jax.lax.optimization_barrier(D)
 
         # --- staleness policy: may this step use the stale overlapped
         # window?  'fixed' is stateless and skips the branch (bitwise the
@@ -290,17 +355,36 @@ class DCS3GD:
             "delta_norm": _mean_worker_norm(delta),
             **pol_metrics,
         }
+        next_wire = None
+        if self.overlap and self._reduces_weights:
+            # fence BEFORE packing: the issue must not add a fusion
+            # consumer to the weight-update expression, or the stored
+            # params themselves shift by an ulp vs the inline program
+            new_params = jax.lax.optimization_barrier(new_params)
+            next_wire = plan.pack(new_params)
         return TrainState(new_params, opt,
                           self._comm(delta, sdt, pstate, plan=plan,
-                                     rstate=rstate),
+                                     rstate=rstate, prev_comm=state.comm,
+                                     next_wire=next_wire),
                           state.step + 1), metrics
 
     def _comm(self, delta: PyTree, sdt, pstate: Optional[PyTree] = None, *,
               plan=None, packed: bool = False,
-              rstate: Optional[PyTree] = None) -> PyTree:
+              rstate: Optional[PyTree] = None,
+              prev_comm: Optional[dict] = None,
+              next_wire: Optional[PyTree] = None) -> PyTree:
         """Next step's wire state; with a plan the carried deltas are the
         flat buckets themselves (``packed=True`` when ``delta`` already
-        is the bucket list, e.g. from the fused bucketed tail)."""
+        is the bucket list, e.g. from the fused bucketed tail).
+
+        Under ``overlap`` this is also where the next reduction goes on
+        the wire: the just-produced payload (the carried delta buckets,
+        or ``next_wire`` — the packed NEW weights — for
+        ``reduces_weights`` topologies) is issued NOW, at the very end of
+        the step's program, and the landed result rides to the next step
+        in ``comm["pipeline"]``.  The payload is exactly what the inline
+        schedule would reduce at the top of the next step, so the
+        trajectory is bitwise-unchanged."""
         if self._reduces_weights:
             comm = {}
         elif plan is not None:
@@ -313,6 +397,16 @@ class DCS3GD:
             comm["staleness"] = pstate
         if rstate is not None:
             comm["reducer"] = rstate
+        if self.overlap:
+            from repro.parallel import pipeline as PL
+            wire = next_wire if self._reduces_weights \
+                else comm["delta_prev"]
+            rs_in = None if self._reducer_stateless \
+                else prev_comm["reducer"]
+            pl_state, rs_out = PL.issue(self.reducer, wire, rs_in)
+            comm["pipeline"] = pl_state
+            if rs_out is not None:
+                comm["reducer"] = rs_out
         return comm
 
     def eval_params(self, state: TrainState) -> PyTree:
@@ -343,7 +437,11 @@ class DCS3GD:
         * **comm["staleness"] / comm["reducer"]** — delegated to the
           piece's own ``resize`` hook (counters collapse to the leader;
           error-feedback residual mass is conserved, see
-          `repro.core.compress`).
+          `repro.core.compress`);
+        * **comm["pipeline"]** — in-flight buckets drain or collapse
+          (stateless reducers re-issue on the resized wire, stateful
+          keep the worker-count-independent landed payload — see
+          `repro.parallel.pipeline.resize`).
 
         Pure state transform: ``self`` still targets the old worker
         count afterwards — rebuild the algorithm for ``n_new`` via
@@ -373,6 +471,14 @@ class DCS3GD:
         if "reducer" in state.comm:
             comm["reducer"] = self.reducer.resize(state.comm["reducer"],
                                                   n_new)
+        if "pipeline" in state.comm:
+            # drain/collapse the in-flight buckets against the RESIZED
+            # wire (see repro.parallel.pipeline.resize)
+            from repro.parallel import pipeline as PL
+            wire = self._plan(params).pack(params) \
+                if self._reduces_weights else comm["delta_prev"]
+            comm["pipeline"] = PL.resize(self.reducer,
+                                         state.comm["pipeline"], wire)
         return TrainState(params, opt, comm, state.step)
 
     # -- sharding hooks -----------------------------------------------------
@@ -393,6 +499,10 @@ class DCS3GD:
             # leading dim, the contiguous flat dim never split mid-leaf
             overrides["delta_prev"] = self._plan(state.params).specs(
                 axes.worker_spec)
+        if "pipeline" in state.comm:
+            from repro.parallel import pipeline as PL
+            overrides["pipeline"] = PL.specs(
+                self.reducer, self._plan(state.params), axes.worker_spec)
         return shd.train_state_specs(
             model_cfg, state, model_size=axes.model_size,
             worker_axes=axes.worker_spec, comm_overrides=overrides)
@@ -459,6 +569,9 @@ class DCS3GD:
 
             w_nb, m_nb, delta_b, lam = jax.vmap(per_worker_b)(
                 g_b, D, m_b, w_b)
+            if self.overlap and self._reduces_weights:
+                # fence before the issue reads w_nb (see reference tail)
+                w_nb = jax.lax.optimization_barrier(w_nb)
             new_params = plan.unpack(w_nb)
             opt = jax.tree.map(lambda x: x.astype(sdt),
                                {"m": plan.unpack(m_nb)})
@@ -471,7 +584,12 @@ class DCS3GD:
             }
             return TrainState(new_params, opt,
                               self._comm(delta_b, sdt, pstate, plan=plan,
-                                         packed=True, rstate=rstate),
+                                         packed=True, rstate=rstate,
+                                         prev_comm=state.comm,
+                                         next_wire=w_nb
+                                         if (self.overlap
+                                             and self._reduces_weights)
+                                         else None),
                               state.step + 1), metrics
 
         def per_worker(g_i, d_i, m_i, w_i):

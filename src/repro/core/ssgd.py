@@ -42,7 +42,14 @@ class SSGD:
 
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None,
-                 buckets: Optional[int] = None, **_ignored):
+                 buckets: Optional[int] = None, use_kernels: bool = False,
+                 overlap: bool = False, **_ignored):
+        if overlap:
+            raise ValueError(
+                "overlap=True is not available for ssgd: the gradient "
+                "all-reduce is blocking by definition (the update depends "
+                "on THIS step's gradients — paper Eq. 13).  Overlap is "
+                "what dc_s3gd/stale buy with the one-step-stale wire")
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -50,6 +57,10 @@ class SSGD:
             else registry.make_local_optimizer(local_optimizer, cfg))
         self.reducer = registry.make_reducer(
             "mean_allreduce" if reducer is None else reducer, cfg)
+        self.use_kernels = bool(use_kernels)
+        # route compressed reducers with a fused Pallas body through it
+        if use_kernels and hasattr(self.reducer, "use_kernels"):
+            self.reducer.use_kernels = True
         # flat-buffer bucketing for the gradient all-reduce (the blocking
         # wire): >0 packs grads into contiguous buckets so the reducer
         # casts/means once per bucket, not per leaf; 0 = legacy per-leaf

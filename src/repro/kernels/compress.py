@@ -1,0 +1,97 @@
+"""Pallas kernel for the error-feedback compression body.
+
+The XLA lowering of one compressed-reducer bucket is ~4 model-sized HBM
+passes: select mask from the threshold, wire cast + masked payload, the
+worker mean, and the residual update ``a − c``.  This kernel fuses them
+into ONE row-grid launch per bucket — each grid step reads a
+``(W, ROWS, LANES)`` slab of the accumulated payload once and writes
+the ``(ROWS, LANES)`` mean slab and the ``(W, ROWS, LANES)`` residual
+slab:
+
+    keep_w = |a_w| >= t_w          (per-worker select; union=True ORs
+                                    the masks over W first — topk_exact)
+    c_w    = where(keep, a_w, 0)   cast to comm_dtype on the wire
+    mean   = mean_w(c_w)           (f32 out)
+    res'_w = a_w − c_w             (what compression dropped)
+
+The per-worker thresholds are computed *outside* in XLA
+(`repro.core.compress.magnitude_threshold`) — they are reductions over
+the whole bucket, not an elementwise pass — and enter as a tiny (W, 1)
+operand broadcast to every grid step, same idiom as `dc_update`'s
+scalar block.
+
+Like the other kernels in this package: semantics are defined by the
+oracle (`repro.kernels.ref.select_ef_mean_ref`), CPU runs interpret
+mode, TPU compiles the same body to Mosaic.  Buckets from a
+`repro.parallel.buckets.BucketPlan` are BLOCK-aligned by construction,
+so the reshape to (W, rows, 128) tiles needs no padding; the dispatch
+site (`TopKReduce._fused_bucket`) falls back to the XLA body for
+unaligned (test-sized) buckets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.dc_update import BLOCK, LANES, ROWS
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _select_ef_kernel(t_ref, a_ref, mean_ref, res_ref, *, w, dt, union):
+    a = a_ref[...].astype(jnp.float32)            # (W, ROWS, LANES)
+    t = t_ref[...].reshape(w, 1, 1)               # per-worker thresholds
+    keep = jnp.abs(a) >= t
+    if union:
+        # topk_exact: every worker contributes its TRUE value wherever
+        # ANY worker selected — the mean is exact on the union support
+        keep = jnp.broadcast_to(jnp.any(keep, axis=0, keepdims=True),
+                                a.shape)
+    c = jnp.where(keep, a, jnp.float32(0.0))
+    # the wire cast happens before the mean, op-for-op `MeanAllReduce`
+    mean_ref[...] = jnp.mean(c.astype(dt), axis=0).astype(jnp.float32)
+    res_ref[...] = a - c
+
+
+def select_ef_mean(a: jnp.ndarray, thresh: jnp.ndarray, *, comm_dtype,
+                   union: bool, interpret=None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused select + wire cast + worker mean + residual for one bucket.
+
+    a: (W, n) f32 accumulated payload (wire + residual), n % BLOCK == 0;
+    thresh: (W, 1) f32 per-worker magnitude thresholds (``>=`` keeps).
+    Returns ``(mean, new_residual)``: (1, n) f32 and (W, n) f32 —
+    bit-identical semantics to the XLA body in `repro.core.compress`
+    (see `ref.select_ef_mean_ref`)."""
+    interpret = _is_cpu() if interpret is None else interpret
+    w, n = a.shape
+    assert n % BLOCK == 0, (a.shape, BLOCK)
+    assert thresh.shape == (w, 1), thresh.shape
+    rows = n // LANES
+    a3 = a.reshape(w, rows, LANES)
+    kern = functools.partial(_select_ef_kernel, w=w,
+                             dt=jnp.dtype(comm_dtype), union=bool(union))
+    mean3, res3 = pl.pallas_call(
+        kern,
+        grid=(rows // ROWS,),
+        in_specs=[
+            pl.BlockSpec((w, 1), lambda i: (0, 0)),        # thresholds
+            pl.BlockSpec((w, ROWS, LANES), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((w, ROWS, LANES), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((w, rows, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(thresh, a3)
+    return mean3.reshape(1, n), res3.reshape(w, n)

@@ -42,6 +42,27 @@ def dc_fused_update_ref(g, d, m, w, *, lam, mu, eta, wd, decay_mask: bool
     return w_new, m_new, delta
 
 
+def select_ef_mean_ref(a, thresh, *, comm_dtype, union: bool
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for `repro.kernels.compress.select_ef_mean` — one bucket of
+    the error-feedback compression body:
+
+        keep_w = |a_w| >= t_w    (union=True ORs the masks over workers)
+        c_w    = where(keep, a_w, 0)
+        mean   = mean_w(cast(c_w, comm_dtype))      → f32, shape (1, n)
+        res'_w = a_w − c_w                          → f32, shape (W, n)
+
+    a: (W, n) f32 accumulated payload; thresh: (W, 1) f32."""
+    a32 = a.astype(jnp.float32)
+    keep = jnp.abs(a32) >= thresh
+    if union:
+        keep = jnp.any(keep, axis=0, keepdims=True)
+    c = jnp.where(keep, a32, 0.0)
+    mean = jnp.mean(c.astype(comm_dtype), axis=0,
+                    keepdims=True).astype(jnp.float32)
+    return mean, a32 - c
+
+
 def decode_attention_ref(q, k, v, valid_len) -> jnp.ndarray:
     """One-token GQA decode attention.
 

@@ -53,7 +53,8 @@ PyTree = Any
 
 # checkpoint metadata keys describing the algorithm that produced a state
 CKPT_ALGO_KEYS = ("algo", "reducer", "reducer_opts", "local_optimizer",
-                  "n_workers", "staleness", "ssp_threshold", "buckets")
+                  "n_workers", "staleness", "ssp_threshold", "buckets",
+                  "overlap")
 
 
 def mesh_context(mesh):
@@ -331,6 +332,10 @@ class Engine:
             # the per-leaf tree): restore sites must rebuild with the same
             # plan or the template won't match the checkpoint
             "buckets": getattr(alg, "buckets", None),
+            # the pipelined schedule carries in-flight buckets in
+            # comm["pipeline"] — restore sites must rebuild with overlap
+            # on or the state template won't match the checkpoint
+            "overlap": getattr(alg, "overlap", None),
         }
 
     def save(self, path, state: PyTree, *, step: Optional[int] = None):
@@ -379,6 +384,7 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                              staleness: str = "fixed",
                              ssp_threshold: int = 4,
                              buckets: int = 0,
+                             overlap: bool = False,
                              dc_cfg: Optional[DCS3GDConfig] = None
                              ) -> Tuple[Any, dict]:
     """Build the `DistributedOptimizer` matching a training checkpoint.
@@ -397,7 +403,7 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                 "local_optimizer": local_optimizer, "reducer": reducer,
                 "reducer_opts": reducer_opts,
                 "staleness": staleness, "ssp_threshold": ssp_threshold,
-                "buckets": buckets}
+                "buckets": buckets, "overlap": overlap}
     for k in CKPT_ALGO_KEYS:
         if meta.get(k) is not None:
             resolved[k] = meta[k]
@@ -411,5 +417,6 @@ def algorithm_for_checkpoint(path, *, algo: str = "dc_s3gd",
                         local_optimizer=resolved["local_optimizer"],
                         reducer=red,
                         staleness=resolved["staleness"],
-                        buckets=int(resolved["buckets"] or 0))
+                        buckets=int(resolved["buckets"] or 0),
+                        overlap=bool(resolved["overlap"] or False))
     return alg, resolved

@@ -113,6 +113,16 @@ def build_argparser():
                     help="pack comm state into this many contiguous "
                          "flat buckets (repro.parallel.buckets); 0 = "
                          "legacy per-leaf reduce/update")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered bucket pipeline "
+                         "(repro.parallel.pipeline): issue each step's "
+                         "reduce at the tail, consume it at the next "
+                         "step's head; needs --buckets > 0")
+    ap.add_argument("--dense-after-join", type=int, default=0,
+                    help="run this many steps on the dense wire after an "
+                         "elastic join before re-enabling a compressed "
+                         "(error-feedback) reducer — drains the joiner's "
+                         "inherited residual in one step")
     return ap
 
 
@@ -134,6 +144,7 @@ def _adopt_resume_meta(args) -> None:
                                          args.ssp_threshold))
     args.workers = int(adopted.get("n_workers", args.workers))
     args.buckets = int(adopted.get("buckets", args.buckets) or 0)
+    args.overlap = bool(adopted.get("overlap", args.overlap) or False)
     print(f"[train] resume metadata: {adopted}")
 
 
@@ -175,7 +186,8 @@ def run(args) -> dict:
                                        or {}))
     alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
                         reducer=reducer, staleness=args.staleness,
-                        use_kernels=args.use_kernels, buckets=args.buckets)
+                        use_kernels=args.use_kernels, buckets=args.buckets,
+                        overlap=args.overlap)
     engine = Engine(model, alg)
     state = alg.init(params)
 
@@ -212,7 +224,8 @@ def run(args) -> dict:
         membership = Membership(alg, faults=faults,
                                 eject_threshold=args.eject_skew,
                                 eject_patience=args.eject_patience,
-                                min_workers=args.min_workers)
+                                min_workers=args.min_workers,
+                                dense_after_join=args.dense_after_join)
 
     def batch_fn(it, n_workers=args.workers):
         return worker_batches(data, it, n_workers, args.batch_per_worker)

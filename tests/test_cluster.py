@@ -290,7 +290,7 @@ def test_slowdown_factors_follow_spec_order():
 
 def _elastic_fit(schedule, *, W=4, steps=12, staleness="fixed",
                  measure=False, probe=None, eject=None, seed_problem=0,
-                 buckets=0, reducer=None, **fit_kw):
+                 buckets=0, reducer=None, dense_after_join=0, **fit_kw):
     loss_fn, init, _, batch_fn = quadratic_problem(n=12, seed=seed_problem)
     kw = {"staleness": staleness, "buckets": buckets}
     if reducer is not None:
@@ -298,7 +298,7 @@ def _elastic_fit(schedule, *, W=4, steps=12, staleness="fixed",
     alg = registry.make("dc_s3gd", CFG, n_workers=W, **kw)
     faults = FaultSchedule.from_json(schedule) if schedule else None
     ms = Membership(alg, faults=faults, eject_threshold=eject,
-                    eject_patience=2)
+                    eject_patience=2, dense_after_join=dense_after_join)
     engine = Engine(_QuadModel(loss_fn), alg)
     state, history, _ = engine.fit(
         alg.init(init),
@@ -336,6 +336,45 @@ def test_fit_same_count_swap_still_applies_barrier():
         W=3, steps=5)
     assert ms.spec.ids == ("w1", "w2", "w3")
     assert len(ms.log) == 2
+
+
+def test_dense_after_join_window_zeroes_residual():
+    """During the joiner catch-up window the error-feedback reducer is
+    wrapped dense: every step delivers residual + payload exactly, so
+    the carried residual is identically zero while the window is open
+    (the run here ENDS inside the window)."""
+    from repro.core.compress import DenseWindowReduce
+    ms, state, history = _elastic_fit(
+        {"events": [{"step": 3, "kind": "join", "count": 1}]},
+        W=3, steps=6, buckets=4, dense_after_join=10,
+        reducer=registry.make_reducer("topk", CFG, density=1e-4))
+    assert isinstance(ms.alg.reducer, DenseWindowReduce)
+    assert [e["kind"] for e in ms.log] == ["join", "dense_window_start"]
+    assert all(not np.asarray(r).any()
+               for r in state.comm["reducer"]["residual"])
+    assert all(jnp.isfinite(h["loss"]) for h in history)
+
+
+def test_dense_after_join_window_elapses_and_compression_resumes():
+    """After the window the wrapped reducer is restored (NOT the dense
+    wrapper) and the compressor re-contracts: the residual carries
+    dropped mass again — the log records the full start/end bracket."""
+    from repro.core.compress import DenseWindowReduce, TopKReduce
+    ms, state, history = _elastic_fit(
+        {"events": [{"step": 3, "kind": "join", "count": 1}]},
+        W=3, steps=10, buckets=4, dense_after_join=2,
+        reducer=registry.make_reducer("topk", CFG, density=1e-4))
+    assert isinstance(ms.alg.reducer, TopKReduce)
+    assert not isinstance(ms.alg.reducer, DenseWindowReduce)
+    assert [e["kind"] for e in ms.log] == \
+        ["join", "dense_window_start", "dense_window_end"]
+    start = next(e for e in ms.log if e["kind"] == "dense_window_start")
+    end = next(e for e in ms.log if e["kind"] == "dense_window_end")
+    assert end["step"] == start["step"] + 2
+    # compression resumed -> dropped mass is back in the residual
+    assert any(np.asarray(r).any()
+               for r in state.comm["reducer"]["residual"])
+    assert all(jnp.isfinite(h["loss"]) for h in history)
 
 
 def test_fit_ejects_persistent_straggler():

@@ -224,6 +224,104 @@ def test_per_bucket_sparsify_never_crosses_bucket_boundaries():
     assert int((np.asarray(out[0][0]) != 0).sum()) <= W * k0
 
 
+def test_magnitude_threshold_exact_below_cliff():
+    """n <= EXACT_TOPK_MAX: the threshold IS the lax.top_k k-th value,
+    and >= selects exactly k elements (random floats — no ties)."""
+    from repro.core.compress import magnitude_threshold
+    mag = jnp.abs(random.normal(random.PRNGKey(0), (3, 512)))
+    k = 37
+    t = magnitude_threshold(mag, k)
+    expect = jax.lax.top_k(mag, k)[0][..., -1:]
+    assert _bitwise(t, expect)
+    assert (np.asarray(mag >= t).sum(-1) == k).all()
+
+
+def test_magnitude_threshold_full_density_is_zero():
+    from repro.core.compress import EXACT_TOPK_MAX, magnitude_threshold
+    for n in (64, EXACT_TOPK_MAX * 2):
+        mag = jnp.abs(random.normal(random.PRNGKey(1), (2, n)))
+        assert not np.asarray(magnitude_threshold(mag, n)).any()
+        assert not np.asarray(magnitude_threshold(mag, n + 5)).any()
+
+
+def _hi_floor(x):
+    """The smallest f32 whose top-16 bits equal x's (the coarse
+    threshold's documented value)."""
+    return ((np.float32(x).view(np.int32) >> 16) << 16).view(np.float32)
+
+
+def test_magnitude_threshold_coarse_is_kth_hi_floor():
+    """Above the cliff the threshold is the bit-space floor of the TRUE
+    k-th magnitude — at least k selected, magnitude dominance, and the
+    overshoot confined to low-mantissa ties of the k-th value."""
+    from repro.core.compress import EXACT_TOPK_MAX, magnitude_threshold
+    n = EXACT_TOPK_MAX * 2
+    mag = jnp.abs(random.normal(random.PRNGKey(2), (2, n)))
+    k = 131
+    t = np.asarray(magnitude_threshold(mag, k))
+    srt = np.sort(np.asarray(mag), axis=-1)[:, ::-1]
+    for r in range(mag.shape[0]):
+        assert t[r, 0] == _hi_floor(srt[r, k - 1]), (t[r, 0], srt[r, k - 1])
+        kept = np.asarray(mag)[r] >= t[r, 0]
+        assert kept.sum() >= k
+        # dominance: every kept magnitude >= every dropped one up to the
+        # hi-floor tie window
+        assert np.asarray(mag)[r][~kept].max() < t[r, 0]
+
+
+def test_magnitude_threshold_coarse_fallback_on_unlucky_subsample():
+    """All large values at odd indices: the 1/16-strided subsample sees
+    none of them, its estimate is invalid, and the lax.cond full-row
+    fallback must still return the exact k-th hi-value."""
+    from repro.core.compress import EXACT_TOPK_MAX, magnitude_threshold
+    n = EXACT_TOPK_MAX * 2
+    k = 97
+    base = np.abs(np.asarray(
+        random.normal(random.PRNGKey(3), (1, n)))) * 1e-3
+    base[0, 1:2 * k * 16:16] += 100.0     # odd stride-16 offsets only
+    mag = jnp.asarray(base, jnp.float32)
+    t = np.asarray(magnitude_threshold(mag, k))[0, 0]
+    srt = np.sort(base[0])[::-1]
+    assert t == _hi_floor(srt[k - 1])
+    assert (base[0] >= t).sum() >= k
+
+
+def test_reducer_use_kernels_matches_xla_path():
+    """The fused Pallas compression body (select + wire cast + worker
+    mean + residual update in one launch) is a pure lowering swap:
+    bitwise against the unfused XLA path, for the own-support and
+    union-support variants, at a kernel-aligned bucket size."""
+    from repro.core.compress import TopKExactReduce
+    from repro.kernels import compress as KC
+    tree = {"big": jnp.zeros((2 * KC.BLOCK,))}
+    plan = B.plan_buckets(tree, 1)
+    d = [random.normal(random.PRNGKey(4), (W, n))
+         for n in plan.bucket_sizes]
+    for make in (lambda: TopKReduce(density=0.01),
+                 lambda: TopKExactReduce(density=0.01)):
+        ref_red, k_red = make(), make()
+        k_red.use_kernels = True
+        out0, rs0 = ref_red(d, ref_red.init(W, plan))
+        out1, rs1 = k_red(d, k_red.init(W, plan))
+        assert _bitwise(out0, out1)
+        assert _bitwise(rs0, rs1)
+
+
+def test_topk_full_density_use_kernels_still_matches_mean():
+    """density=1.0 through the FUSED body: zero threshold keeps all, so
+    the kernelized topk still bitwise-equals the dense mean."""
+    from repro.kernels import compress as KC
+    tree = {"big": jnp.zeros((KC.BLOCK,))}
+    plan = B.plan_buckets(tree, 1)
+    d = [random.normal(random.PRNGKey(5), (W, n))
+         for n in plan.bucket_sizes]
+    red = TopKReduce(density=1.0)
+    red.use_kernels = True
+    out, rs = red(d, red.init(W, plan))
+    assert _bitwise(out, MeanAllReduce()(d))
+    assert all(not np.asarray(r).any() for r in rs["residual"])
+
+
 def test_compressed_reducers_require_buckets():
     for red in (TopKReduce(), RandKReduce(), PowerSGDReduce()):
         with pytest.raises(ValueError, match="buckets"):

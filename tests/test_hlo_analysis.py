@@ -157,3 +157,53 @@ def test_bucketed_dc_s3gd_step_has_fewer_wire_ops():
     r2, c2 = counts(2)
     assert r2 < r0, (r2, r0)
     assert c2 < c0, (c2, c0)
+
+
+def test_topk_wire_bytes_scale_with_density_not_buckets():
+    """The compressed wire payload is a DENSITY knob, not a layout knob:
+    doubling ``compress_density`` ~doubles topk's wire bytes, while
+    re-bucketing the same total size leaves them ~constant (k is
+    per-bucket ceil, so the only drift is rounding)."""
+    from repro.core.compress import TopKReduce
+
+    total = 1 << 16
+    red1 = TopKReduce(comm_dtype="bfloat16", density=0.01)
+    red2 = TopKReduce(comm_dtype="bfloat16", density=0.02)
+    b1 = red1.wire_bytes([total])
+    assert red2.wire_bytes([total]) == pytest.approx(2 * b1, rel=0.01)
+    for n_buckets in (2, 4, 8):
+        sizes = [total // n_buckets] * n_buckets
+        assert red1.wire_bytes(sizes) == pytest.approx(b1, rel=0.01)
+
+
+def test_pipelined_step_same_wire_op_count_as_inline():
+    """The overlap schedule MOVES the reduce (to the tail of the
+    previous step), it never duplicates it: the lowered pipelined step
+    carries exactly as many stablehlo.reduce ops as the inline bucketed
+    step."""
+    from repro.core import registry
+    from repro.core.types import DCS3GDConfig
+
+    n_leaves, W = 10, 4
+    params = {f"w{i}": jnp.ones((8, 8), jnp.float32)
+              for i in range(n_leaves)}
+
+    def loss_fn(p, b):
+        acc = 0.0
+        for v in p.values():
+            acc = acc + jnp.mean((b["x"] @ v) ** 2)
+        return acc
+
+    batch = {"x": jnp.ones((W, 2, 8), jnp.float32)}
+    cfg = DCS3GDConfig(comm_dtype="bfloat16", total_steps=1)
+
+    def counts(overlap):
+        alg = registry.make("dc_s3gd", cfg, n_workers=W, buckets=2,
+                            overlap=overlap)
+        state = alg.init(params)
+        return _lowered_op_counts(
+            lambda s, b: alg.step(s, b, loss_fn=loss_fn), state, batch)
+
+    r_inline, _ = counts(False)
+    r_pipe, _ = counts(True)
+    assert r_pipe == r_inline, (r_pipe, r_inline)

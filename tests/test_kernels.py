@@ -163,3 +163,44 @@ def test_ssm_scan_kernel_matches_mamba_module():
     y_full = y_full @ p["w_out"]
     np.testing.assert_allclose(y_full, y_module, atol=1e-4)
     np.testing.assert_allclose(h_k, h_module, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused compression body (select + wire cast + worker mean + EF residual)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("w", [2, 4])
+@pytest.mark.parametrize("blocks", [1, 2])
+@pytest.mark.parametrize("comm_dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("union", [False, True])
+def test_select_ef_mean_kernel_matches_ref(w, blocks, comm_dtype, union):
+    from repro.kernels import compress as KC
+    n = blocks * KC.BLOCK
+    a = random.normal(random.PRNGKey(w * 7 + blocks), (w, n), jnp.float32)
+    # per-worker thresholds at ~1% density, like the reducer computes
+    k = max(1, n // 100)
+    thresh = jnp.sort(jnp.abs(a), axis=-1)[:, -k][:, None]
+    dt = jnp.dtype(comm_dtype)
+    mean_k, res_k = KC.select_ef_mean(a, thresh, comm_dtype=dt,
+                                      union=union)
+    mean_r, res_r = ref.select_ef_mean_ref(a, thresh, comm_dtype=dt,
+                                           union=union)
+    assert mean_k.shape == (1, n) and res_k.shape == (w, n)
+    assert mean_k.dtype == res_k.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(mean_k), np.asarray(mean_r))
+    np.testing.assert_array_equal(np.asarray(res_k), np.asarray(res_r))
+
+
+def test_select_ef_mean_zero_threshold_is_dense_mean():
+    """thresh = 0 keeps everything: the fused body degrades to the plain
+    worker mean with an identically-zero residual (the density=1.0
+    cliff-guard path)."""
+    from repro.kernels import compress as KC
+    a = random.normal(random.PRNGKey(9), (4, KC.BLOCK), jnp.float32)
+    mean, res = KC.select_ef_mean(a, jnp.zeros((4, 1), jnp.float32),
+                                  comm_dtype=jnp.dtype(jnp.float32),
+                                  union=False)
+    np.testing.assert_array_equal(
+        np.asarray(mean), np.asarray(jnp.mean(a, 0, keepdims=True)))
+    assert not np.asarray(res).any()

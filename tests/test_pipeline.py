@@ -1,0 +1,281 @@
+"""`repro.parallel.pipeline` — the double-buffered bucket pipeline.
+
+The load-bearing pin: the pipelined (overlap=True) schedule is
+**bitwise-equal** to the inline bucketed schedule under jit — same
+reducer-call sequence, same inputs, the issue of step t's payload merely
+moves from the top of step t+1 to the bottom of step t.  Plus the
+construction-time rejections, the comm["pipeline"] state contract,
+elastic-resize drain/collapse, checkpoint metadata round-trip, and the
+eval_shape dry-run (the pipeline state must not break the pure-step
+property donation and checkpointing rely on).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.types import DCS3GDConfig
+
+from helpers import quadratic_problem, stack_batches
+
+CFG = DCS3GDConfig(learning_rate=0.1, momentum=0.9, lambda0=0.2,
+                   weight_decay=1e-3, total_steps=1)
+W = 4
+
+
+def _loss_and_init():
+    loss_fn, _, _, batch_fn = quadratic_problem(n=8, seed=3)
+    init = {"w": jnp.zeros((8,)), "mat": jnp.zeros((8, 8))}
+
+    def loss2(p, b):
+        pred = b["A"] @ (p["w"] + p["mat"].sum(0) * 0.01)
+        return 0.5 * jnp.mean((pred - b["y"]) ** 2)
+
+    return loss2, init, batch_fn
+
+
+def _run(algo="dc_s3gd", steps=5, n_workers=W, **kw):
+    """Jitted trajectory — the pipeline's bitwise guarantee is about the
+    COMPILED program (fusion seams), so the pin must run under jit."""
+    loss2, init, batch_fn = _loss_and_init()
+    alg = registry.make(algo, CFG, n_workers=n_workers, **kw)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss2))
+    state = alg.init(init)
+    metrics = None
+    for t in range(steps):
+        state, metrics = step(state, stack_batches(batch_fn, t, n_workers))
+    return alg, state, metrics
+
+
+def _bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        x.dtype == y.dtype and bool(jnp.array_equal(x, y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# bitwise: pipelined == inline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ["dc_s3gd", "stale"])
+@pytest.mark.parametrize("reducer", ["mean_allreduce", "topk",
+                                     "topk_exact", "randk", "powersgd",
+                                     "hierarchical"])
+def test_overlap_bitwise_matches_inline(algo, reducer):
+    _, s0, m0 = _run(algo, reducer=reducer, buckets=2)
+    _, s1, m1 = _run(algo, reducer=reducer, buckets=2, overlap=True)
+    assert _bitwise(s0.params, s1.params)
+    assert bool(jnp.array_equal(m0["loss"], m1["loss"]))
+    if "reducer" in s0.comm:
+        # the reducer-state chain runs exactly ONE call ahead of the
+        # inline layout (the issue of step t's payload lives at the tail
+        # of step t instead of the head of step t+1): overlap after N
+        # steps bitwise-equals inline after N+1 — same call sequence,
+        # shifted by one program boundary
+        _, s0n, _ = _run(algo, reducer=reducer, buckets=2, steps=6)
+        assert _bitwise(s0n.comm["reducer"], s1.comm["reducer"])
+
+
+def test_overlap_gossip_allclose():
+    """Gossip is pinned allclose, not bitwise: its weighted neighbor sum
+    ends in a multiply, and XLA's codegen of that epilogue is context-
+    dependent (the same reduce, materialized at a different program
+    position, can differ in the last ulp — observed ~1e-9/step on CPU
+    even with both sides of the seam fenced by optimization_barrier).
+    Every other reducer's epilogue ends in an add/select and IS bitwise
+    (the parametrized pin above)."""
+    _, s0, _ = _run(reducer="gossip", buckets=2)
+    _, s1, _ = _run(reducer="gossip", buckets=2, overlap=True)
+    for a, b in zip(jax.tree.leaves(s0.params),
+                    jax.tree.leaves(s1.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("reducer", ["mean_allreduce", "topk"])
+def test_overlap_composes_with_fused_kernels_bitwise(reducer):
+    """overlap=True + use_kernels=True: the Pallas tail (and topk's
+    fused compression body) under the pipelined schedule still bitwise-
+    matches the inline schedule at the same flags."""
+    _, s0, _ = _run(reducer=reducer, buckets=2, use_kernels=True)
+    _, s1, _ = _run(reducer=reducer, buckets=2, use_kernels=True,
+                    overlap=True)
+    assert _bitwise(s0.params, s1.params)
+
+
+def test_overlap_dynamic_ssp_stateless_reducer_bitwise():
+    """dynamic_ssp composes with a STATELESS reducer under overlap (the
+    revoke discards the landed value through the same lax.cond)."""
+    _, s0, _ = _run(staleness="dynamic_ssp", buckets=2)
+    _, s1, _ = _run(staleness="dynamic_ssp", buckets=2, overlap=True)
+    assert _bitwise(s0.params, s1.params)
+
+
+# ---------------------------------------------------------------------------
+# construction-time rejections
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_requires_buckets():
+    with pytest.raises(ValueError, match="bucketed wire"):
+        registry.make("dc_s3gd", CFG, n_workers=W, buckets=0,
+                      overlap=True)
+
+
+def test_overlap_rejected_for_ssgd():
+    with pytest.raises(ValueError, match="blocking"):
+        registry.make("ssgd", CFG, n_workers=W, buckets=2, overlap=True)
+
+
+def test_overlap_rejects_dynamic_ssp_with_stateful_reducer():
+    """The revoke needs the pre-issue error-feedback residual, which the
+    pipelined issue has already advanced past."""
+    with pytest.raises(ValueError, match="stateful staleness"):
+        registry.make("dc_s3gd", CFG, n_workers=W, buckets=2,
+                      overlap=True, staleness="dynamic_ssp",
+                      reducer="topk")
+
+
+# ---------------------------------------------------------------------------
+# state contract
+# ---------------------------------------------------------------------------
+
+
+def test_comm_pipeline_shapes_mean_style():
+    alg, state, _ = _run(reducer="topk", buckets=2, overlap=True, steps=2)
+    plan = alg._plan(state.params)
+    landed = state.comm["pipeline"]["reduced"]
+    assert isinstance(landed, list)
+    assert [x.shape for x in landed] == [(1, n) for n in plan.bucket_sizes]
+    assert all(x.dtype == jnp.float32 for x in landed)
+
+
+def test_comm_pipeline_shapes_reduces_weights():
+    alg, state, _ = _run(reducer="hierarchical", buckets=2, overlap=True,
+                         steps=2)
+    plan = alg._plan(state.params)
+    landed = state.comm["pipeline"]["reduced"]
+    assert [x.shape for x in landed] == [(W, n) for n in plan.bucket_sizes]
+
+
+def test_init_primes_pipeline():
+    """init() issues the reduce of the zero payload — the landed buffer
+    exists (and is zero for a mean-style reducer over zero deltas)
+    before the first step runs."""
+    loss2, init, _ = _loss_and_init()
+    alg = registry.make("dc_s3gd", CFG, n_workers=W, buckets=2,
+                        overlap=True)
+    state = alg.init(init)
+    landed = state.comm["pipeline"]["reduced"]
+    assert all(bool(jnp.all(x == 0)) for x in landed)
+
+
+def test_eval_shape_dry_run():
+    """The pipelined step stays a pure jit-able function: eval_shape
+    traces it with no concrete work and the output state template
+    matches the input (donation / checkpoint-template contract)."""
+    loss2, init, batch_fn = _loss_and_init()
+    alg = registry.make("dc_s3gd", CFG, n_workers=W, buckets=2,
+                        overlap=True)
+    state = alg.init(init)
+    batch = stack_batches(batch_fn, 0, W)
+    out_state, _ = jax.eval_shape(
+        lambda s, b: alg.step(s, b, loss_fn=loss2), state, batch)
+    assert jax.tree_util.tree_structure(out_state) == \
+        jax.tree_util.tree_structure(state)
+
+
+# ---------------------------------------------------------------------------
+# elastic resize: drain / collapse
+# ---------------------------------------------------------------------------
+
+
+def test_resize_stateless_drains_to_fresh_reduce():
+    """Resize with a stateless reducer re-issues on the resized wire:
+    the drained landed buffer bitwise-equals a fresh jitted reduce of
+    the post-collapse delta_prev — and the run continues finite at the
+    new W.  (Trajectory-level bitwise-vs-inline across a resize is NOT
+    promised — see the λ-amplification note in repro.parallel.pipeline.)
+    """
+    from repro.cluster import rebuild_algorithm
+    loss2, init, batch_fn = _loss_and_init()
+    alg, state, _ = _run(buckets=2, overlap=True, steps=3)
+    state = alg.resize_state(state, 3)
+    wire = state.comm["delta_prev"]
+    fresh = jax.jit(lambda w: list(alg.reducer(w)))(wire)
+    for a, b in zip(state.comm["pipeline"]["reduced"], fresh):
+        assert a.shape == b.shape == (1, a.shape[1])
+        assert bool(jnp.array_equal(a, b))
+    alg = rebuild_algorithm(alg, 3)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss2))
+    for t in range(3, 5):
+        state, m = step(state, stack_batches(batch_fn, t, 3))
+    assert bool(jnp.isfinite(m["loss"]))
+    assert state.params["w"].shape == (3, 8)
+
+
+def test_resize_stateful_keeps_landed_and_survives():
+    """Resize with an error-feedback reducer keeps the landed (1, n)
+    payload (worker-count independent; its mass is accounted by the
+    resized residual) and the run continues finite at the new W with
+    pipeline shapes tracking it."""
+    from repro.cluster import rebuild_algorithm
+    loss2, init, batch_fn = _loss_and_init()
+    alg, state, _ = _run(reducer="topk", buckets=2, overlap=True, steps=3)
+    before = [np.asarray(x) for x in state.comm["pipeline"]["reduced"]]
+    state = alg.resize_state(state, 3)
+    after = state.comm["pipeline"]["reduced"]
+    assert all(np.array_equal(a, np.asarray(b))
+               for a, b in zip(before, after))
+    alg = rebuild_algorithm(alg, 3)
+    step = jax.jit(lambda s, b: alg.step(s, b, loss_fn=loss2))
+    for t in range(3, 6):
+        state, m = step(state, stack_batches(batch_fn, t, 3))
+    assert bool(jnp.isfinite(m["loss"]))
+    plan = alg._plan(state.params)
+    assert [x.shape for x in state.comm["pipeline"]["reduced"]] == \
+        [(1, n) for n in plan.bucket_sizes]
+    # per-worker error-feedback residuals track the new W
+    assert all(r.shape[0] == 3
+               for r in jax.tree.leaves(state.comm["reducer"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint metadata round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_ckpt_meta_roundtrip_overlap(tmp_path):
+    from repro.launch.engine import Engine, algorithm_for_checkpoint
+
+    class _QuadModel:
+        cfg = None
+
+        def __init__(self, loss_fn):
+            self._loss = loss_fn
+
+        def loss(self, params, batch):
+            return self._loss(params, batch)
+
+    loss2, init, batch_fn = _loss_and_init()
+    alg = registry.make("dc_s3gd", CFG, n_workers=W, buckets=2,
+                        overlap=True, reducer="topk")
+    engine = Engine(_QuadModel(loss2), alg)
+    state = alg.init(init)
+    path = tmp_path / "ckpt"
+    engine.save(str(path), state, step=0)
+    assert engine.ckpt_meta()["overlap"] is True
+
+    restored_alg, resolved = algorithm_for_checkpoint(str(path))
+    assert resolved["overlap"] is True
+    assert restored_alg.overlap is True
+    # the rebuilt template carries the in-flight buckets, so the saved
+    # comm["pipeline"] state restores structurally
+    template = restored_alg.init(init)
+    assert jax.tree_util.tree_structure(template) == \
+        jax.tree_util.tree_structure(state)
+    restored = engine.restore(str(path), template)
+    assert _bitwise(restored.comm["pipeline"], state.comm["pipeline"])
