@@ -15,10 +15,19 @@ Both paths are warmed first (compilation excluded); tokens/s counts only
 the tokens requests actually asked for — the dense path's overshoot
 decode steps are exactly the waste continuous batching removes.
 
+A third pair of rows measures **prefix caching** (PR 8) on a
+shared-prefix workload — ``SHARED_FRAC`` of the requests open with the
+same long system prompt: ``prefix_cold`` serves it with chunked prefill
+but no cache, ``prefix_hit`` with ``prefix_cache=True`` (sharers map
+their block tables onto the committed prompt pages and skip that
+prefill).  Same chunk executable both ways, so the delta is pure reuse.
+
 ``--json`` writes ``BENCH_serve.json`` (``BENCH_serve.smoke.json`` for
 smoke runs): per-path tokens/s, the paged path's p50/p95 per-token
-decode latency, pool occupancy / internal fragmentation, and the
-speedup.  CI gates paged >= dense on this file (``bench-serve`` job).
+decode latency + TTFT, pool occupancy / internal fragmentation,
+``cache_tokens_allocated`` (cumulative pages * page_size — the number
+prefix sharing cuts), and the speedups.  CI gates paged >= dense AND
+prefix_hit >= prefix_cold with the allocation cut (``bench-serve`` job).
 """
 from __future__ import annotations
 
@@ -40,6 +49,9 @@ PROMPT_LEN = 16
 GEN_LENGTHS = (2, 4, 6, 8, 12, 16, 24, 64)
 
 
+SHARED_FRAC = 0.8   # of the shared-prefix workload's requests
+
+
 def make_workload(n: int, vocab: int, seed: int = 0):
     from repro.serve import Request
     rng = np.random.default_rng(seed)
@@ -47,6 +59,24 @@ def make_workload(n: int, vocab: int, seed: int = 0):
                     prompt=rng.integers(0, vocab, PROMPT_LEN).tolist(),
                     max_new=GEN_LENGTHS[i % len(GEN_LENGTHS)])
             for i in range(n)]
+
+
+def make_shared_prefix_workload(n: int, vocab: int, sys_len: int,
+                                tail_len: int, gen: int, seed: int = 0):
+    """``SHARED_FRAC`` of the requests open with one shared ``sys_len``
+    system prompt followed by a unique ``tail_len`` tail; the rest are
+    fully unique prompts of the same total length."""
+    from repro.serve import Request
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, vocab, sys_len).tolist()
+    reqs = []
+    for i in range(n):
+        if i % max(round(1 / (1 - SHARED_FRAC)), 1):  # 4 of 5 share
+            prompt = sys_prompt + rng.integers(0, vocab, tail_len).tolist()
+        else:
+            prompt = rng.integers(0, vocab, sys_len + tail_len).tolist()
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gen))
+    return reqs
 
 
 def dense_serve(engine, params, reqs, batch: int):
@@ -123,8 +153,56 @@ def main(args=None):
     tok_paged = useful(reqs_p)
     summary = sch.latency_summary()
 
+    # -- prefix caching on a shared-prefix workload (cold vs hit) -----------
+    sys_len = 64 if smoke else 96
+    tail_len = 8
+    pfx_gen = 6
+    pfx_n = 15 if smoke else 30
+    pfx_len = sys_len + tail_len + pfx_gen + 1
+    pfx_pages = slots * -(-pfx_len // page_size) + 1 \
+        + 2 * -(-(sys_len + tail_len) // page_size)  # + committed prefixes
+    pfx_workload = lambda: make_shared_prefix_workload(
+        pfx_n, cfg.vocab_size, sys_len, tail_len, pfx_gen)
+
+    def prefix_serve(prefix_cache: bool):
+        s = Scheduler(model, params, slots=slots, pages=pfx_pages,
+                      page_size=page_size, max_len=pfx_len, decode_burst=8,
+                      prefill_chunk=2 * page_size, prefix_cache=prefix_cache)
+        paged_serve(s, pfx_workload())        # warm: compile (+ fill cache)
+        walls, allocs = [], []
+        for _ in range(passes):
+            s.finished.clear()
+            s.stats.update(decode_steps=0, prefills=0, preemptions=0,
+                           tokens=0, chunks=0, cow_copies=0,
+                           step_walls=[], occupancy=[])
+            a0 = s.pool.total_allocs
+            reqs = pfx_workload()
+            walls.append(paged_serve(s, reqs))
+            allocs.append((s.pool.total_allocs - a0) * page_size)
+            assert all(len(r.out) == r.max_new for r in reqs)
+        return min(walls), useful(reqs), min(allocs), s.latency_summary()
+
+    wall_cold, tok_cold, alloc_cold, sum_cold = prefix_serve(False)
+    wall_hit, tok_hit, alloc_hit, sum_hit = prefix_serve(True)
+
     dense_tps = tok_dense / wall_dense
     paged_tps = tok_paged / wall_paged
+    cold_tps = tok_cold / wall_cold
+    hit_tps = tok_hit / wall_hit
+
+    def prefix_row(path, tok, wall, alloc, s):
+        return {"path": path, "tokens": tok, "wall_s": round(wall, 3),
+                "tokens_per_s": round(tok / wall, 1),
+                "cache_tokens_allocated": alloc,
+                "prefill_chunks": s["prefill_chunks"],
+                "cow_copies": s["cow_copies"],
+                "prefix_hits": s.get("prefix_hits", 0),
+                "prefix_hit_tokens": s.get("prefix_hit_tokens", 0),
+                "p50_ttft_ms": round(s.get("p50_ttft_s", 0.0) * 1e3, 3),
+                "p95_ttft_ms": round(s.get("p95_ttft_s", 0.0) * 1e3, 3),
+                "p95_token_latency_ms": round(
+                    s.get("p95_token_latency_s", 0.0) * 1e3, 3)}
+
     rows = [
         {"path": "dense", "tokens": tok_dense,
          "wall_s": round(wall_dense, 3),
@@ -145,12 +223,17 @@ def main(args=None):
              summary.get("mean_pool_utilization", 0.0), 4),
          "mean_internal_fragmentation": round(
              summary.get("mean_internal_fragmentation", 0.0), 4),
+         "p50_ttft_ms": round(summary.get("p50_ttft_s", 0.0) * 1e3, 3),
+         "p95_ttft_ms": round(summary.get("p95_ttft_s", 0.0) * 1e3, 3),
          "preemptions": summary["preemptions"]},
+        prefix_row("prefix_cold", tok_cold, wall_cold, alloc_cold, sum_cold),
+        prefix_row("prefix_hit", tok_hit, wall_hit, alloc_hit, sum_hit),
     ]
     for r in rows:
         emit(f"serve_{r['path']}", 1e6 / max(r["tokens_per_s"], 1e-9),
              f"tokens_per_s={r['tokens_per_s']}")
     speedup = paged_tps / dense_tps
+    pfx_speedup = hit_tps / cold_tps
 
     if getattr(args, "json", False):
         out = {
@@ -159,15 +242,23 @@ def main(args=None):
             "workload": {"n_requests": n_requests,
                          "prompt_len": PROMPT_LEN,
                          "gen_lengths": list(GEN_LENGTHS)},
+            "shared_prefix_workload": {
+                "n_requests": pfx_n, "shared_frac": SHARED_FRAC,
+                "sys_len": sys_len, "tail_len": tail_len, "gen": pfx_gen,
+                "prefill_chunk": 2 * page_size},
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "smoke": smoke,
             "rows": rows,
             "paged_speedup": round(speedup, 3),
+            "prefix_speedup": round(pfx_speedup, 3),
+            "prefix_alloc_ratio": round(alloc_hit / max(alloc_cold, 1), 3),
         }
         name = SMOKE_JSON_NAME if smoke else JSON_NAME
         Path(name).write_text(json.dumps(out, indent=2))
-        print(f"# wrote {name} (paged speedup {speedup:.2f}x)")
+        print(f"# wrote {name} (paged speedup {speedup:.2f}x, "
+              f"prefix speedup {pfx_speedup:.2f}x, "
+              f"alloc ratio {out['prefix_alloc_ratio']})")
     return rows
 
 

@@ -93,10 +93,14 @@ def load_requests(path: Path, vocab: int, default_gen: int,
     return reqs
 
 
-def synthetic_requests(n: int, vocab: int, gen: int, seed: int = 0) -> list:
+def synthetic_requests(n: int, vocab: int, gen: int, seed: int = 0,
+                       rng=None) -> list:
     """Staggered synthetic workload: prompt lengths cycle over a few
-    buckets (bounding prefill compilations), gen lengths spread 1..gen."""
-    rng = np.random.default_rng(seed)
+    buckets (bounding prefill compilations), gen lengths spread 1..gen.
+    Pass ``rng`` to draw contents from a caller-owned stream (the Poisson
+    mode keeps contents and arrivals independently seeded so neither
+    perturbs the other)."""
+    rng = np.random.default_rng(seed) if rng is None else rng
     p_lens = [8, 16, 24, 32]
     reqs = []
     for i in range(n):
@@ -107,12 +111,38 @@ def synthetic_requests(n: int, vocab: int, gen: int, seed: int = 0) -> list:
     return reqs
 
 
+def record_arrival_schedule(args, reqs, arrivals,
+                            path=Path("BENCH_serve.json")) -> None:
+    """Record the Poisson workload (stream seeds, per-request shape, the
+    drawn arrival offsets) under the ``poisson`` key of
+    ``BENCH_serve.json`` so a load run is exactly reproducible."""
+    data = {}
+    if path.exists():
+        try:
+            data = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data["poisson"] = {
+        "rate_req_s": args.poisson,
+        "num_requests": len(reqs),
+        "content_stream_seed": [args.seed, 0],
+        "arrival_stream_seed": [args.seed, 1],
+        "requests": [{"rid": r.rid, "prompt_len": len(r.prompt),
+                      "gen": r.max_new} for r in reqs],
+        "arrivals_s": [round(float(a), 6) for a in arrivals],
+    }
+    path.write_text(json.dumps(data, indent=2))
+    print(f"[serve] arrival schedule recorded in {path}")
+
+
 def run_scheduler(model, params, reqs, args, arrivals=None) -> None:
     sch = Scheduler(model, params, slots=args.slots, pages=args.pages,
                     page_size=args.page_size,
                     sampler=args.sampler, temperature=args.temperature,
                     seed=args.seed, use_kernel=args.paged_kernel,
-                    decode_burst=args.decode_burst)
+                    decode_burst=args.decode_burst,
+                    prefill_chunk=args.prefill_chunk,
+                    prefix_cache=args.prefix_cache)
     t0 = time.time()
     done = sch.run(reqs, arrivals=arrivals)
     wall = time.time() - t0
@@ -122,8 +152,10 @@ def run_scheduler(model, params, reqs, args, arrivals=None) -> None:
           f"{toks} tokens in {wall:.1f}s ({toks / wall:.1f} tok/s), "
           f"slots={args.slots} pages={args.pages}x{args.page_size}")
     for k in ("p50_token_latency_s", "p95_token_latency_s",
+              "p50_ttft_s", "p95_ttft_s",
               "mean_pool_utilization", "mean_internal_fragmentation",
-              "preemptions"):
+              "preemptions", "prefill_chunks", "cow_copies",
+              "prefix_hits", "prefix_hit_tokens", "prefix_evictions"):
         if k in summary:
             print(f"[serve]   {k} = {summary[k]:.4g}")
     for req in sorted(done, key=lambda r: r.rid)[:4]:
@@ -165,6 +197,14 @@ def main(argv=None):
                     help="decode steps scanned per dispatch (multi-step "
                          "scheduling; admissions/evictions land on burst "
                          "boundaries)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: forward prompts this many "
+                         "tokens per step, interleaved with decode (0 = "
+                         "whole-prompt prefill on join)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share committed prompt-prefix pages between "
+                         "requests (copy-on-write on divergence; implies "
+                         "chunked prefill, default chunk 4*page_size)")
     ap.add_argument("--train-ckpt", type=Path, default=None,
                     help="serve eval_params of a training checkpoint "
                          "(metadata selects the algorithm)")
@@ -201,12 +241,17 @@ def main(argv=None):
         run_scheduler(model, params, reqs, args)
         return
     if args.poisson is not None:
-        rng = np.random.default_rng(args.seed)
+        # independently seeded streams: prompt contents and arrival gaps
+        # never read the same bits, so changing --num-requests (or the
+        # rate) leaves every request's content identical
+        content_rng = np.random.default_rng([args.seed, 0])
+        arrival_rng = np.random.default_rng([args.seed, 1])
         reqs = synthetic_requests(args.num_requests, cfg.vocab_size,
-                                  args.gen, seed=args.seed)
-        gaps = rng.exponential(1.0 / max(args.poisson, 1e-6),
-                               len(reqs))
+                                  args.gen, rng=content_rng)
+        gaps = arrival_rng.exponential(1.0 / max(args.poisson, 1e-6),
+                                       len(reqs))
         arrivals = np.cumsum(gaps).tolist()
+        record_arrival_schedule(args, reqs, arrivals)
         run_scheduler(model, params, reqs, args, arrivals=arrivals)
         return
 

@@ -257,6 +257,81 @@ def attention_decode(params: dict, cache: dict, x: jnp.ndarray, pos: jnp.ndarray
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill (paged cache resume — repro.models.cache._ChunkOps)
+# ---------------------------------------------------------------------------
+
+
+def attention_prefill_chunk(params: dict, cache: dict, x: jnp.ndarray,
+                            positions: jnp.ndarray, *, rope_theta: float,
+                            qk_norm: bool = False, norm_eps: float = 1e-6,
+                            cache_ops=None) -> Tuple[jnp.ndarray, dict]:
+    """Prefill a CHUNK of a prompt against the paged KV cache: x is
+    (B, L, d) at absolute ``positions`` (L,) — the prompt's earlier
+    positions already live in the pages ``cache_ops`` addresses.  The
+    chunk's k/v are scattered into the pages first, then the chunk's
+    queries attend over the whole linearized paged view with the
+    causal mask doing the future-masking.
+
+    The KV reduction is blocked at a FIXED page-aligned block size
+    (``cache_ops.kv_prefill_attend`` → `_blocked_attention` with
+    ``kv_chunk = page_size``), so a position's output is bitwise
+    independent of the total prompt length and of where chunk
+    boundaries fall — fully-masked KV blocks are exact no-ops in the
+    online softmax.  That invariance is what lets a prefix-cache hit
+    resume mid-prompt and still be bitwise the cold prefill."""
+    B, L, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if qk_norm:
+        q = rmsnorm(params["q_norm"], q, norm_eps)
+        k = rmsnorm(params["k_norm"], k, norm_eps)
+    if rope_theta > 0:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    H, KV = q.shape[2], k.shape[2]
+    qg = q.reshape(B, L, KV, H // KV, q.shape[-1])
+    out, cache = cache_ops.kv_prefill_attend(cache, qg, k, v, positions)
+    out = out.reshape(B, L, H, -1).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+
+def mla_prefill_chunk(params: dict, cache: dict, x: jnp.ndarray,
+                      positions: jnp.ndarray, *, mla_cfg, rope_theta: float,
+                      norm_eps: float = 1e-6, cache_ops=None
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """MLA analogue of `attention_prefill_chunk`: the chunk's latents are
+    scattered into the latent pages, then the chunk queries attend over
+    the linearized latent view expanded through W_uk / W_uv (the
+    multi-query form — the absorbed decode form is single-token)."""
+    m = mla_cfg
+    B, L, _ = x.shape
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"], norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["w_uq"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckv = rmsnorm(params["kv_norm"], x @ params["w_dkv"], norm_eps)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        rope_theta)[:, :, 0]
+    ckv_lin, kr_lin, cache = cache_ops.mla_prefill(cache, ckv, k_rope)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_lin, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv_lin, params["w_uv"])
+    H = q.shape[2]
+    Sk = ckv_lin.shape[1]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_lin[:, :, None, :],
+                                  (B, Sk, H, m.qk_rope_head_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _blocked_attention(q_full[:, :, :, None, :], k_full, v,
+                             positions, jnp.arange(Sk), causal=True,
+                             window=0, q_chunk=L,
+                             kv_chunk=cache_ops.layout.page_size)
+    out = out.reshape(B, L, H, m.v_head_dim).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+
+# ---------------------------------------------------------------------------
 # MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
 # ---------------------------------------------------------------------------
 

@@ -180,6 +180,66 @@ class _PagedOps:
         return lin, valid
 
 
+class _ChunkOps:
+    """The jit-time cache ops for a CHUNKED-prefill dispatch: a group of
+    rows resuming their prompts at per-row absolute ``pos0``, writing
+    ``L`` consecutive positions into pages and attending over the full
+    linearized paged view.
+
+    The KV reduction is blocked at a fixed ``page_size`` granularity
+    aligned to absolute position 0, and the view always spans the whole
+    block table — so every dispatch compiles to ONE executable (shapes
+    never depend on the prompt or resume point) and a position's output
+    is bitwise independent of total prompt length and chunk alignment
+    (fully-masked KV blocks are exact no-ops in the online softmax).
+    Positions past the real prompt (the padded tail of the last chunk)
+    write into whatever page the block table names there — the scratch
+    page when unallocated — and are overwritten by decode or masked by
+    every later causal/validity mask."""
+
+    def __init__(self, layout: "PagedLayout", positions: jnp.ndarray,
+                 block_tables: jnp.ndarray):
+        self.layout = layout
+        self.positions = positions       # (L,) absolute (group rows share)
+        self.bt = block_tables           # (B, max_pages) int32
+
+    def _scatter(self, pool: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+        """new: (B, L, ...) entries for absolute ``positions``."""
+        ps = self.layout.page_size
+        mp = self.bt.shape[1]
+        # the padded tail of a prompt's final chunk can run past the
+        # block table — route those writes to the scratch page instead
+        # of letting the clamped gather alias the table's last entry
+        safe = self.positions < mp * ps                # (L,)
+        page = jnp.minimum(self.positions // ps, mp - 1)
+        phys = jnp.where(safe[None], self.bt[:, page], SCRATCH_PAGE)
+        off = jnp.broadcast_to((self.positions % ps)[None], phys.shape)
+        return pool.at[phys, off].set(new.astype(pool.dtype))
+
+    def _linearize(self, pool: jnp.ndarray) -> jnp.ndarray:
+        B, mp = self.bt.shape
+        ps = self.layout.page_size
+        return pool[self.bt].reshape(B, mp * ps, *pool.shape[2:])
+
+    def kv_prefill_attend(self, cache: dict, qg, k_new, v_new, positions):
+        from repro.models.attention import _blocked_attention
+        k_p = self._scatter(cache["k"], k_new)
+        v_p = self._scatter(cache["v"], v_new)
+        k_lin = self._linearize(k_p)
+        v_lin = self._linearize(v_p)
+        out = _blocked_attention(
+            qg, k_lin, v_lin, positions, jnp.arange(k_lin.shape[1]),
+            causal=True, window=0, q_chunk=qg.shape[1],
+            kv_chunk=self.layout.page_size)
+        return out, {"k": k_p, "v": v_p}
+
+    def mla_prefill(self, cache: dict, ckv, k_rope):
+        ckv_p = self._scatter(cache["ckv"], ckv)
+        kr_p = self._scatter(cache["k_rope"], k_rope)
+        return (self._linearize(ckv_p), self._linearize(kr_p),
+                {"ckv": ckv_p, "k_rope": kr_p})
+
+
 class PagedLayout:
     """Paged KV cache + slot-indexed fixed states for continuous batching.
 
@@ -204,6 +264,16 @@ class PagedLayout:
                             + [0])
         self.uses_pages = any(paged_kinds(cfg, st.kinds)
                               for st in model.stages)
+        # chunked prefill / prefix caching need every cache kind to be
+        # position-addressable in pages (rings and SSM/RG-LRU states are
+        # slot-indexed — a mid-prompt resume would need state snapshots)
+        # and per-token block math (routed MoE drops tokens by batch
+        # occupancy, so a chunk boundary would change the math)
+        self.chunkable = (
+            all(list(paged_kinds(cfg, st.kinds)) == list(st.kinds)
+                for st in model.stages)
+            and (cfg.moe is None or model.moe_dense)
+            and cfg.vlm is None and cfg.encoder is None)
 
     # -- allocation-free capacity facts ------------------------------------
 
@@ -324,6 +394,54 @@ class PagedLayout:
         if kind in ("mamba", "recurrent"):
             return {k: to_slot(c[k], e[k]) for k in c}
         raise ValueError(kind)
+
+    # -- chunked prefill (mid-prompt resume) --------------------------------
+
+    def prefill_resume(self, params, cache: PyTree, tokens: jnp.ndarray,
+                       pos0: jnp.ndarray, last: jnp.ndarray,
+                       block_tables: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, PyTree]:
+        """Prefill ONE chunk of a prompt, resuming mid-prompt: ``tokens``
+        (B, L) at absolute positions ``pos0 + [0, L)`` (``pos0`` a (B,)
+        vector, equal across the group — chunk dispatches are per
+        request, B = 1), writing into the pages ``block_tables`` names
+        and attending over everything already committed there.  ``last``
+        (B,) indexes the final REAL position inside the chunk (the tail
+        may be padding); the returned logits are taken there.
+
+        Every dispatch has the same shapes regardless of prompt length
+        or resume position, so the whole chunked prefill of any prompt
+        is one compiled executable — and, with the fixed page-aligned KV
+        blocking of `_ChunkOps`, bitwise independent of where chunk /
+        prefix-cache boundaries fall (`docs/serve.md`)."""
+        if not self.chunkable:
+            raise NotImplementedError(
+                f"{self.model.cfg.name}: chunked prefill needs every cache "
+                "kind paged (attention/MLA, window 0) and per-token FFN "
+                "math — use whole-prompt prefill_into")
+        positions = pos0[0] + jnp.arange(tokens.shape[1])
+        ops = _ChunkOps(self, positions, block_tables)
+        return self.model.prefill_chunk(params, cache,
+                                        {"tokens": tokens, "last": last},
+                                        positions=positions, cache_ops=ops)
+
+    def copy_page(self, cache: PyTree, src: jnp.ndarray, dst: jnp.ndarray
+                  ) -> PyTree:
+        """Copy one physical page's rows src -> dst in every paged pool —
+        the device half of copy-on-write (the host swaps the block-table
+        entry and drops the shared reference)."""
+        new = []
+        for si, stage in enumerate(self.model.stages):
+            unit = {}
+            for j, kind in enumerate(stage.kinds):
+                c = cache[si][f"b{j}"]
+                if kind in paged_kinds(self.model.cfg, stage.kinds):
+                    unit[f"b{j}"] = {k: v.at[:, dst].set(v[:, src])
+                                     for k, v in c.items()}
+                else:
+                    unit[f"b{j}"] = c
+            new.append(unit)
+        return new
 
     # -- decode -------------------------------------------------------------
 

@@ -601,6 +601,76 @@ class Model:
         logits = (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
         return self._mask_pad_logits(logits[:, 0]), caches
 
+    def prefill_chunk(self, params, caches, batch, *, positions,
+                      cache_ops) -> Tuple[jnp.ndarray, PyTree]:
+        """Forward ONE chunk of a prompt against a paged cache
+        (`repro.models.cache.PagedLayout.prefill_resume`): ``tokens``
+        (B, L) at absolute ``positions`` (L,), earlier positions already
+        in the pages ``cache_ops`` addresses.  Returns ((B, vocab)
+        logits at ``batch['last']`` — the chunk's final real position —
+        and the updated caches.  Only attention / MLA kinds: the layout
+        gates chunkability before dispatch."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+        x = x.astype(self.compute_dtype)
+        if cfg.rope_theta == 0.0:  # absolute positions (mid-prompt offset)
+            import math as _math
+            d = cfg.d_model
+            dim = jnp.arange(d // 2, dtype=jnp.float32)
+            inv = jnp.exp(-_math.log(10000.0) * dim / max(d // 2 - 1, 1))
+            ang = positions.astype(jnp.float32)[:, None] * inv[None]
+            pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+            x = x + pe.astype(x.dtype)[None]
+        new_caches = []
+        for si, stage in enumerate(self.stages):
+            def unit_body(carry, pc, _stage=stage):
+                h = carry
+                p, c = pc
+                new_c = {}
+                for j, kind in enumerate(_stage.kinds):
+                    h, nc = self._prefill_chunk_block(
+                        kind, p[f"b{j}"], c[f"b{j}"], h, positions, cache_ops)
+                    new_c[f"b{j}"] = nc
+                return h, new_c
+            x, nc = jax.lax.scan(unit_body, x,
+                                 (params[f"stage{si}"], caches[si]))
+            new_caches.append(nc)
+        # logits at the chunk's last real position only (the tail of the
+        # final chunk is padding)
+        x = jnp.take_along_axis(x, batch["last"][:, None, None], axis=1)
+        x = _norm(cfg, params["final_norm"], x)
+        logits = (x[:, 0] @ params["unembed"].astype(x.dtype)
+                  ).astype(jnp.float32)
+        return self._mask_pad_logits(logits), new_caches
+
+    def _prefill_chunk_block(self, kind, p, cache, x, positions, cache_ops):
+        cfg = self.cfg
+        if kind == "attention":
+            h = _norm(cfg, p["ln1"], x)
+            h, new_cache = attn.attention_prefill_chunk(
+                p["attn"], cache, h, positions, rope_theta=cfg.rope_theta,
+                qk_norm=cfg.qk_norm, norm_eps=cfg.norm_eps,
+                cache_ops=cache_ops)
+            x = x + h
+            h = _norm(cfg, p["ln2"], x)
+            if "moe" in p:  # chunkable gate ensures moe_dense
+                h, _ = moe_mod.moe_ffn_dense(p["moe"], h, cfg.moe,
+                                             cfg.activation)
+            else:
+                h = mlp(p["mlp"], h, cfg.activation)
+            return x + h, new_cache
+        if kind == "mla":
+            h = _norm(cfg, p["ln1"], x)
+            h, new_cache = attn.mla_prefill_chunk(
+                p["attn"], cache, h, positions, mla_cfg=cfg.mla,
+                rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                cache_ops=cache_ops)
+            x = x + h
+            h = _norm(cfg, p["ln2"], x)
+            return x + mlp(p["mlp"], h, cfg.activation), new_cache
+        raise ValueError(f"chunked prefill over {kind!r} blocks — the "
+                         "layout's chunkable gate should have refused")
+
     def decode_step(self, params, caches, batch, *,
                     cache_ops=None) -> Tuple[jnp.ndarray, PyTree]:
         """batch: {'tokens': (B,1), 'pos': scalar int32, [mrope/frames aux]}.

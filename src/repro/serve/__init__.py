@@ -2,7 +2,8 @@
 
 Carved out of `repro.launch.engine.Engine` (PR 5):
 
-* `repro.serve.pool`      — the page allocator (`PagePool`);
+* `repro.serve.pool`      — the refcounted page allocator (`PagePool`)
+  and the committed-prefix-page index (`PrefixCache`, PR 8);
 * `repro.serve.scheduler` — the continuous-batching request scheduler
   (`Scheduler` / `Request`) over `repro.models.cache.PagedLayout`;
 * `repro.serve.oneshot`   — the fixed-batch scan-loop generator
@@ -13,8 +14,8 @@ See ``docs/serve.md`` for the cache-layout / block-table contract, the
 scheduler lifecycle, and the bench schema.
 """
 from repro.serve.oneshot import SAMPLERS, OneShotGenerator
-from repro.serve.pool import PagePool
+from repro.serve.pool import PagePool, PrefixCache
 from repro.serve.scheduler import Request, Scheduler
 
-__all__ = ["SAMPLERS", "OneShotGenerator", "PagePool", "Request",
-           "Scheduler"]
+__all__ = ["SAMPLERS", "OneShotGenerator", "PagePool", "PrefixCache",
+           "Request", "Scheduler"]

@@ -28,7 +28,21 @@ never let a fast lane wait on a slow one:
   boundaries (a finished lane idles at most ``burst - 1`` steps — still
   bounded, unlike the dense loop's ``gen_max - gen_i``).  Each slot's
   token sequence is unchanged (the burst is the same per-step math,
-  host-invisible in between).
+  host-invisible in between);
+* ``prefill_chunk > 0`` switches admission to **chunked prefill**:
+  prompts are forwarded ``prefill_chunk`` tokens at a time, ONE chunk
+  per step interleaved with the running decode bursts, so a long prompt
+  never stalls the batch (the thing TTFT p95 measures).  Chunk
+  dispatches are fixed-shape — one compiled executable for every chunk
+  of every prompt (`repro.models.cache.PagedLayout.prefill_resume`);
+* ``prefix_cache=True`` (implies chunked prefill) consults the
+  `repro.serve.pool.PrefixCache` radix index at admission: a prompt
+  whose leading tokens match committed pages maps its block table onto
+  the same physical pages and resumes prefill after them, with
+  copy-on-write before the first divergent append.  Because hit and
+  cold prompts run the same chunk executable over the same page-aligned
+  KV blocking, a prefix-hit decode is bitwise the cold-prefill decode
+  under greedy (pinned by ``tests/test_prefix_cache.py``).
 
 Under greedy sampling each slot's trajectory is bitwise the dense
 layout's (same batch width, matched linearized cache length) — pinned by
@@ -47,7 +61,7 @@ import numpy as np
 
 from repro.models.cache import SCRATCH_PAGE, PagedLayout
 from repro.serve.oneshot import SAMPLERS, resolve_sampler
-from repro.serve.pool import PagePool
+from repro.serve.pool import PagePool, PrefixCache
 
 PyTree = Any
 
@@ -88,7 +102,8 @@ class Scheduler:
                  sampler: Optional[str] = None, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  use_kernel: bool = False, donate: bool = True,
-                 decode_burst: int = 1):
+                 decode_burst: int = 1, prefill_chunk: int = 0,
+                 prefix_cache: bool = False):
         self.model = model
         self.params = params
         self.sampler = resolve_sampler(sampler, temperature)
@@ -114,7 +129,21 @@ class Scheduler:
         self.layout = PagedLayout(model, n_slots=slots, num_pages=pages,
                                   page_size=page_size, max_pages=max_pages,
                                   use_kernel=use_kernel)
+        # prefix caching rides on chunked prefill: all prompts (cold
+        # included) must run the SAME chunk executable for a prefix hit
+        # to be bitwise the cold prefill (docs/serve.md)
+        if prefix_cache and prefill_chunk <= 0:
+            prefill_chunk = 4 * page_size
+        self.prefill_chunk = max(int(prefill_chunk), 0)
+        if self.prefill_chunk and not self.layout.chunkable:
+            raise NotImplementedError(
+                f"{model.cfg.name}: chunked prefill / prefix caching need "
+                "every cache kind paged (full attention / MLA) and "
+                "per-token FFN math — ring, SSM and RG-LRU states are "
+                "slot-indexed and can't resume mid-prompt")
         self.pool = PagePool(pages, page_size, reserved=1)
+        self.prefix = PrefixCache(self.pool, page_size) \
+            if prefix_cache else None
         self.cache = self.layout.init_cache()
         self.slots: List[Optional[Request]] = [None] * slots
         self.waiting: Deque[Request] = deque()
@@ -124,14 +153,19 @@ class Scheduler:
         self.next_tok = np.zeros((slots,), np.int32)
         self._slot_pages: List[List[int]] = [[] for _ in range(slots)]
         self._join_order: List[int] = []      # active slots, oldest first
+        self._prefilling: List[int] = []      # slots mid-prefill, FIFO
+        self._prefill_pos = [0] * slots       # next prompt index to prefill
         self._key = jax.random.PRNGKey(seed)
         self._donate = donate
         self._prefill_fn = None
+        self._chunk_fn = None
+        self._cow_fn = None
         self._decode_fns: Dict[int, Any] = {}
         self.finished: List[Request] = []
         self.stats: Dict[str, Any] = {
             "decode_steps": 0, "prefills": 0, "preemptions": 0,
-            "tokens": 0, "step_walls": [], "occupancy": [],
+            "tokens": 0, "chunks": 0, "cow_copies": 0,
+            "step_walls": [], "occupancy": [],
         }
 
     # -- submission ---------------------------------------------------------
@@ -158,6 +192,27 @@ class Scheduler:
                     params, cache, {"tokens": toks}, pages, slots),
                 donate_argnums=1 if self._donate else ())
         return self._prefill_fn
+
+    def _chunk(self):
+        """The jitted chunk prefill (mid-prompt resume).  Fixed shapes —
+        (1, prefill_chunk) tokens, full-width block table — so EVERY
+        chunk of every prompt is one compiled executable."""
+        if self._chunk_fn is None:
+            lay = self.layout
+            self._chunk_fn = jax.jit(
+                lambda params, cache, toks, pos0, last, bt:
+                    lay.prefill_resume(params, cache, toks, pos0, last, bt),
+                donate_argnums=1 if self._donate else ())
+        return self._chunk_fn
+
+    def _cow(self):
+        """The jitted copy-on-write page copy (src -> dst in every pool)."""
+        if self._cow_fn is None:
+            lay = self.layout
+            self._cow_fn = jax.jit(
+                lambda cache, src, dst: lay.copy_page(cache, src, dst),
+                donate_argnums=0 if self._donate else ())
+        return self._cow_fn
 
     def _decode(self, burst: int):
         """The compiled decode burst: ``burst`` scan steps in one
@@ -195,13 +250,18 @@ class Scheduler:
 
     def _release(self, slot: int) -> None:
         if self._slot_pages[slot]:
+            # drops ONE reference per page: pages shared with the prefix
+            # cache / other slots stay live for their other holders
             self.pool.free(self._slot_pages[slot])
         self._slot_pages[slot] = []
         self.slots[slot] = None
         self.block_tables[slot, :] = SCRATCH_PAGE
         self.pos[slot] = 0
         self.next_tok[slot] = 0
+        self._prefill_pos[slot] = 0
         self._join_order.remove(slot)
+        if slot in self._prefilling:
+            self._prefilling.remove(slot)
 
     def _preempt_youngest(self) -> bool:
         """Free the most recently joined request (recompute-resume later).
@@ -221,6 +281,9 @@ class Scheduler:
         one prompt length joins as a GROUP — one batched prefill dispatch
         instead of one per request (and bitwise the dense fixed-batch
         prefill when a whole batch joins together)."""
+        if self.prefill_chunk:
+            self._admit_chunked()
+            return
         while self.waiting and None in self.slots:
             p_len = len(self.waiting[0].resume_tokens)
             n_pg = self.layout.pages_for(p_len)
@@ -269,6 +332,128 @@ class Scheduler:
             if starved:
                 break
 
+    def _admit_chunked(self) -> None:
+        """Chunked admission: every waiting request takes a free slot
+        immediately (no equal-length grouping — chunk dispatches are per
+        request and shape-stable), consults the prefix cache for a
+        committed prefix, and joins the ``_prefilling`` queue to be
+        advanced one chunk per step.  The match is capped at prompt-1
+        tokens so the final token's logits are always recomputed."""
+        while self.waiting and None in self.slots:
+            req = self.waiting.popleft()
+            toks = req.resume_tokens
+            pages: List[int] = []
+            matched = 0
+            if self.prefix is not None:
+                pages, matched = self.prefix.match(toks[:len(toks) - 1])
+            slot = self.slots.index(None)
+            self.slots[slot] = req
+            self._slot_pages[slot] = pages   # one pool ref each, from match
+            self.block_tables[slot, :] = SCRATCH_PAGE
+            if pages:
+                self.block_tables[slot, :len(pages)] = pages
+            self.pos[slot] = 0               # masked out of decode until done
+            self.next_tok[slot] = 0
+            self._prefill_pos[slot] = matched
+            self._join_order.append(slot)
+            self._prefilling.append(slot)
+            if req.t_join is None:
+                req.t_join = time.time()
+
+    def _alloc_page_for(self, slot: int) -> Optional[int]:
+        """One page for ``slot``, evicting cold prefix-cache pages first
+        and preempting younger requests second.  None means the only
+        remaining victim is ``slot`` itself — the caller preempts it."""
+        while True:
+            got = self.pool.alloc(1)
+            if got is not None:
+                return got[0]
+            if self.prefix is not None and self.prefix.evict(1):
+                continue
+            if not self._join_order or self._join_order[-1] == slot:
+                return None
+            self._preempt_youngest()
+
+    def _advance_prefill(self) -> bool:
+        """Run ONE prefill chunk for the oldest mid-prefill request:
+        allocate (or copy-on-write) the pages its write range covers,
+        dispatch the fixed-shape chunk executable, and on the final
+        chunk sample the first token, commit the full prompt pages to
+        the prefix cache, and hand the slot to decode."""
+        if not self._prefilling:
+            return False
+        slot = self._prefilling[0]
+        req = self.slots[slot]
+        toks = req.resume_tokens
+        P = len(toks)
+        ps = self.layout.page_size
+        C = self.prefill_chunk
+        start = self._prefill_pos[slot]
+        end = min(start + C, P)
+        first_pg, last_pg = start // ps, (end - 1) // ps
+        while len(self._slot_pages[slot]) <= last_pg:
+            pg = self._alloc_page_for(slot)
+            if pg is None or self.slots[slot] is not req:
+                # pool dry (or we were preempted as a side effect of
+                # freeing memory): requeue and retry next step
+                if self.slots[slot] is req:
+                    self._preempt_youngest()
+                if pg is not None:
+                    self.pool.free([pg])
+                return True
+            idx = len(self._slot_pages[slot])
+            self._slot_pages[slot].append(pg)
+            self.block_tables[slot, idx] = pg
+        # copy-on-write: never scatter into a page another holder (the
+        # prefix cache / a sharer) can still read — only the resume page
+        # of a partial prefix match can be shared, but check the range
+        for idx in range(first_pg, last_pg + 1):
+            pg = self._slot_pages[slot][idx]
+            if self.pool.refcount(pg) <= 1:
+                continue
+            fresh = self._alloc_page_for(slot)
+            if fresh is None or self.slots[slot] is not req:
+                if self.slots[slot] is req:
+                    self._preempt_youngest()
+                if fresh is not None:
+                    self.pool.free([fresh])
+                return True
+            self.cache = self._cow()(self.cache, jnp.int32(pg),
+                                     jnp.int32(fresh))
+            self._slot_pages[slot][idx] = fresh
+            self.block_tables[slot, idx] = fresh
+            self.pool.free([pg])             # drop our ref on the shared page
+            self.stats["cow_copies"] += 1
+        chunk = toks[start:end] + [0] * (C - (end - start))
+        fn = self._chunk()
+        logits, self.cache = fn(
+            self.params, self.cache,
+            jnp.asarray(np.asarray([chunk], np.int32)),
+            jnp.asarray(np.asarray([start], np.int32)),
+            jnp.asarray(np.asarray([end - 1 - start], np.int32)),
+            jnp.asarray(self.block_tables[slot:slot + 1]))
+        self.stats["chunks"] += 1
+        self._prefill_pos[slot] = end
+        if end < P:
+            return True
+        # prompt complete: first token from the final chunk's logits
+        self._key, sub = jax.random.split(self._key)
+        tok = int(np.asarray(SAMPLERS[self.sampler](
+            logits, sub, self.temperature))[0])
+        now = time.time()
+        self.stats["prefills"] += 1
+        self._prefilling.pop(0)
+        if self.prefix is not None:
+            self.prefix.commit(toks, self._slot_pages[slot])
+        self.pos[slot] = P
+        self.next_tok[slot] = tok
+        req.out.append(tok)
+        req.token_walls.append(now)
+        self.stats["tokens"] += 1
+        if self._is_finished(req, tok):
+            self._finish(slot)
+        return True
+
     def _is_finished(self, req: Request, tok: int) -> bool:
         return len(req.out) >= req.max_new or \
             (self.eos_id is not None and tok == self.eos_id)
@@ -280,7 +465,7 @@ class Scheduler:
         if not self.layout.uses_pages:
             return
         for slot in list(self._join_order):
-            if self.slots[slot] is None:
+            if self.slots[slot] is None or slot in self._prefilling:
                 continue
             last_write = int(self.pos[slot]) + burst - 1
             need = min(last_write, self.layout.max_len - 1) \
@@ -288,6 +473,8 @@ class Scheduler:
             while need >= len(self._slot_pages[slot]):
                 got = self.pool.alloc(1)
                 if got is None:
+                    if self.prefix is not None and self.prefix.evict(1):
+                        continue
                     victim = self._join_order[-1]
                     if victim == slot:
                         # can't shrink below myself: preempt myself
@@ -301,15 +488,36 @@ class Scheduler:
 
     # -- the step -----------------------------------------------------------
 
+    def _used_tokens(self) -> int:
+        """Live cache rows, counting each PHYSICAL page once: a page
+        shared by N holders contributes its deepest holder's coverage,
+        and pages only the prefix cache holds stay fully covered."""
+        cover: Dict[int, int] = {}
+        ps = self.layout.page_size
+        for s in range(len(self.slots)):
+            if self.slots[s] is None:
+                continue
+            n = self._prefill_pos[s] if s in self._prefilling \
+                else int(self.pos[s]) + 1
+            for i, pg in enumerate(self._slot_pages[s]):
+                c = min(ps, n - i * ps)
+                if c > 0:
+                    cover[pg] = max(cover.get(pg, 0), c)
+        if self.prefix is not None:
+            for pg in self.prefix.pages():
+                cover[pg] = ps  # committed pages are full by definition
+        return sum(cover.values())
+
     def step(self) -> bool:
-        """Admit, grow, decode one burst (``decode_burst`` tokens) for
-        every active slot.  Returns False when there is nothing to do
-        (idle)."""
+        """Admit, advance one prefill chunk (chunked mode), grow, decode
+        one burst (``decode_burst`` tokens) for every decodable slot.
+        Returns False when there is nothing to do (idle)."""
         self._admit()
+        chunked = self._advance_prefill()
         active = [s for s in range(len(self.slots))
-                  if self.slots[s] is not None]
+                  if self.slots[s] is not None and s not in self._prefilling]
         if not active:
-            return False
+            return chunked
         # adaptive burst: never scan past the earliest ``max_new`` finish
         # (the freed slot re-admits immediately instead of idling out the
         # burst); EOS finishes can't be predicted and idle at most
@@ -319,22 +527,31 @@ class Scheduler:
         burst = max(1, min(self.decode_burst, rem))
         self._grow(burst)
         active = [s for s in range(len(self.slots))
-                  if self.slots[s] is not None]
+                  if self.slots[s] is not None and s not in self._prefilling]
         if not active:
             return True  # everything got preempted while growing
+        bt = self.block_tables
+        if self._prefilling:
+            # mid-prefill slots sit at pos 0 but their block tables name
+            # real (possibly shared) pages — point the DISPATCH copy at
+            # the scratch page so the decode write can't touch them
+            bt = bt.copy()
+            for s in self._prefilling:
+                bt[s, :] = SCRATCH_PAGE
         self._key, sub = jax.random.split(self._key)
         t0 = time.time()
         toks, self.cache = self._decode(burst)(
             self.params, self.cache,
             jnp.asarray(self.next_tok),
             jnp.asarray(self.pos),
-            jnp.asarray(self.block_tables), sub)
+            jnp.asarray(bt), sub)
         toks = np.asarray(toks)                      # (burst, n_slots)
         now = time.time()
         burst = toks.shape[0]
         self.stats["decode_steps"] += burst
         self.stats["step_walls"].append(now - t0)
-        used_tokens = sum(int(self.pos[s]) + 1 for s in active)
+        used_tokens = self._used_tokens() if self.layout.uses_pages \
+            else sum(int(self.pos[s]) + 1 for s in active)
         self.stats["occupancy"].append(
             self.pool.stats(used_tokens=used_tokens)
             if self.layout.uses_pages else {"used_tokens": used_tokens})
@@ -377,20 +594,37 @@ class Scheduler:
     # -- metrics ------------------------------------------------------------
 
     def latency_summary(self) -> Dict[str, float]:
-        """Per-token decode latency percentiles + mean occupancy."""
+        """Per-token decode latency + TTFT percentiles, mean occupancy,
+        and (when enabled) prefix-cache counters."""
         gaps = []
+        ttfts = []
         for req in self.finished:
             # inter-token gaps of the decode phase (the prefill token's
-            # latency is time-to-first-token, a different metric)
+            # latency is time-to-first-token, reported separately)
             ts = req.token_walls
             gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+            if ts and req.t_submit is not None:
+                ttfts.append(ts[0] - req.t_submit)
         out: Dict[str, float] = {"tokens": self.stats["tokens"],
                                  "decode_steps": self.stats["decode_steps"],
                                  "prefills": self.stats["prefills"],
-                                 "preemptions": self.stats["preemptions"]}
+                                 "preemptions": self.stats["preemptions"],
+                                 "prefill_chunks": self.stats["chunks"],
+                                 "cow_copies": self.stats["cow_copies"]}
+        if self.layout.uses_pages:
+            # cumulative cache memory ever allocated, in token slots —
+            # the number prefix sharing is supposed to cut
+            out["cache_tokens_allocated"] = \
+                self.pool.total_allocs * self.layout.page_size
+        if self.prefix is not None:
+            for k, v in self.prefix.stats().items():
+                out[f"prefix_{k}"] = v
         if gaps:
             out["p50_token_latency_s"] = float(np.percentile(gaps, 50))
             out["p95_token_latency_s"] = float(np.percentile(gaps, 95))
+        if ttfts:
+            out["p50_ttft_s"] = float(np.percentile(ttfts, 50))
+            out["p95_ttft_s"] = float(np.percentile(ttfts, 95))
         occ = [o.get("internal_fragmentation") for o in
                self.stats["occupancy"]
                if o.get("internal_fragmentation") is not None]

@@ -73,6 +73,48 @@ def test_pool_free_recycles_and_double_free_raises():
         pool.free([0])  # reserved scratch page was never granted
 
 
+def test_pool_free_is_atomic_on_bad_batch():
+    """A batch containing any invalid page must raise BEFORE any state
+    changes — no half-applied frees corrupting the free list."""
+    pool = PagePool(8, 8)
+    a = pool.alloc(4)
+    before_free, before_used = pool.free_pages, pool.used_pages
+    with pytest.raises(ValueError):
+        pool.free([a[0], a[1], 0])          # reserved page in the batch
+    with pytest.raises(ValueError):
+        pool.free([a[0], a[1], 99])         # foreign page in the batch
+    with pytest.raises(ValueError):
+        pool.free([a[0], a[0]])             # intra-call double free
+    assert pool.free_pages == before_free and pool.used_pages == before_used
+    pool.free(a)                            # the good batch still works
+    assert pool.used_pages == 0
+
+
+def test_pool_refcounts_share_and_release():
+    pool = PagePool(8, 8)
+    [pg] = pool.alloc(1)
+    pool.ref([pg])                          # second holder
+    assert pool.refcount(pg) == 2
+    assert pool.shared_pages == 1
+    assert pool.used_pages == 1, "a shared page counts ONCE"
+    pool.free([pg])                         # first holder drops
+    assert pool.refcount(pg) == 1 and pool.free_pages == 6
+    pool.free([pg])                         # last holder drops -> recycled
+    assert pool.refcount(pg) == 0 and pool.free_pages == 7
+    with pytest.raises(ValueError):
+        pool.free([pg])                     # now a double free
+    with pytest.raises(ValueError):
+        pool.ref([pg])                      # can't share a freed page
+    # intra-call duplicates beyond the refcount raise atomically
+    [pg2] = pool.alloc(1)
+    pool.ref([pg2])
+    with pytest.raises(ValueError):
+        pool.free([pg2, pg2, pg2])          # 3 frees, 2 refs
+    assert pool.refcount(pg2) == 2
+    pool.free([pg2, pg2])                   # exactly the refcount is fine
+    assert pool.used_pages == 0
+
+
 def test_pool_fragmentation_stats():
     pool = PagePool(9, 16)
     pool.alloc(4)
