@@ -76,6 +76,7 @@ def _build(algo: str, reducer: str, use_kernels: bool, buckets: int,
 
 
 def _hlo_counts(step_fn, state, batch, *, use_kernels: bool) -> dict:
+    from repro.analysis.hlo import count_ops
     txt = step_fn.lower(state, batch).as_text()
     # kernel_mode comes from the ACTUAL lowering, not the flag: a Mosaic
     # custom-call in the stablehlo means the Pallas bodies compiled for
@@ -85,8 +86,11 @@ def _hlo_counts(step_fn, state, batch, *, use_kernels: bool) -> dict:
     if use_kernels:
         mode = ("compiled" if ("tpu_custom_call" in txt or "mosaic" in txt)
                 else "interpret")
-    return {"hlo_reduce_ops": txt.count("stablehlo.reduce"),
-            "hlo_convert_ops": txt.count("stablehlo.convert"),
+    # op counts via the shared pass-framework parser (same prefix
+    # semantics as the historical substring counts — pinned in
+    # tests/test_hlo_analysis.py)
+    return {"hlo_reduce_ops": count_ops(txt, "reduce"),
+            "hlo_convert_ops": count_ops(txt, "convert"),
             "kernel_mode": mode}
 
 

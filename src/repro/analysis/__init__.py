@@ -1,1 +1,4 @@
-"""Compile-time analysis: HLO parsing, roofline model, reports."""
+"""Compile-time analysis: HLO parsing, roofline model, reports, and the
+pass-based static analyzer (`repro.analysis.lint` over the lowered
+train-step grid, `repro.analysis.astlint` over the source tree) — see
+``docs/analysis.md``."""

@@ -34,9 +34,19 @@ _DTYPE_BYTES = {
 _COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                "collective-permute", "ragged-all-to-all")
 
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# array shapes, including bounded-dynamic dims: f32[4,8], f32[<=8,4],
+# s32[] — the old r"(\w+)\[([\d,]*)\]" silently yielded 0 bytes for any
+# bounded-dynamic shape (the dims group could not match '<=')
+_SHAPE_RE = re.compile(r"(\w+)\[((?:<=?)?[\d,<=]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
-_OP_RE = re.compile(r"^\s*((?:\([^)]*\)|[\w\[\]\{\},\. ]+?))\s+([\w\-]+)\((.*)$")
+# result type, op kind, rest.  Tuple result types may NEST — a while
+# carrying a tuple lowers to e.g. ((f32[2], s32[]), f32[4]) — so the
+# tuple alternation allows one level of inner parens; the old
+# r"\([^)]*\)" failed on the inner ')' and dropped the op (and with it
+# the whole while body) from traffic accounting
+_OP_RE = re.compile(
+    r"^\s*((?:\((?:[^()]|\([^()]*\))*\)|[\w\[\]\{\},\.<= ]+?))"
+    r"\s+([\w\-]+)\((.*)$")
 _WHILE_RE = re.compile(
     r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
 _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
@@ -67,7 +77,10 @@ def _shape_info(type_text: str) -> Tuple[int, List[int], str]:
     for dtype, dims_s in _SHAPE_RE.findall(type_text):
         if dtype not in _DTYPE_BYTES:
             continue
-        dims = [int(d) for d in dims_s.split(",") if d]
+        # bounded-dynamic dims ('<=8') count at the bound — the buffer is
+        # allocated at the bound, so that's what moves through HBM
+        dims = [int(d.lstrip("<=")) for d in dims_s.split(",")
+                if d.lstrip("<=")]
         n = 1
         for d in dims:
             n *= d
@@ -374,3 +387,30 @@ def collective_bytes(hlo: str) -> Dict[str, float]:
     out = dict(st.coll_breakdown)
     out["total"] = st.coll_bytes
     return out
+
+
+# ---------------------------------------------------------------------------
+# stablehlo (lowered, pre-optimization) op counting — the ONE parser the
+# op-count pins (tests/test_hlo_analysis.py), the step-time bench columns
+# (benchmarks/step_time.py) and the lint passes (repro.analysis.lint)
+# share, instead of three copies of txt.count("stablehlo.<op>")
+# ---------------------------------------------------------------------------
+
+_STABLEHLO_OP_RE = re.compile(r"\bstablehlo\.([A-Za-z_][\w]*)")
+
+
+def stablehlo_op_counts(txt: str) -> Dict[str, int]:
+    """Exact per-kind op counts of a ``lowered.as_text()`` stablehlo
+    module (e.g. ``{"reduce": 3, "convert": 9, ...}``)."""
+    counts: Dict[str, int] = {}
+    for kind in _STABLEHLO_OP_RE.findall(txt):
+        counts[kind] = counts.get(kind, 0) + 1
+    return counts
+
+
+def count_ops(txt: str, prefix: str) -> int:
+    """Count stablehlo ops whose kind starts with ``prefix`` — the same
+    family semantics as the historical ``txt.count("stablehlo.reduce")``
+    (which also matched ``reduce_window`` / ``reduce_precision``)."""
+    return sum(v for k, v in stablehlo_op_counts(txt).items()
+               if k.startswith(prefix))

@@ -277,6 +277,28 @@ class _ErrorFeedbackMean:
                   ) -> jnp.ndarray:
         raise NotImplementedError
 
+    # -- wire accounting exposure (repro.analysis.lint) ---------------------
+
+    def wire_model(self, sizes: Sequence[int], n_workers: int) -> dict:
+        """HLO-observable wire-cast census vs the ``wire_bytes`` hand
+        accounting (WireAccountingPass; see `MeanAllReduce.wire_model`).
+
+        The EF family's simulated wire is DENSE-shaped: ``_mean_over_
+        workers`` casts the full (W, n) sparsified bucket (plus the
+        (1, n) mean-result cast) even though only ~k coordinates are
+        non-zero — on a real wire the payload is values+indices, which
+        is what ``wire_bytes`` hand-counts.  So ``cast_bytes`` models
+        the dense lowering and ``accounted_bytes`` the sparse payload;
+        the pass checks both, and additionally that accounted <= dense."""
+        it = jnp.dtype(self.comm_dtype).itemsize
+        return {"cast_bytes": (n_workers + 1) * sum(sizes) * it,
+                "accounted_bytes":
+                    self._accounted_bytes(sizes, n_workers)}
+
+    def _accounted_bytes(self, sizes: Sequence[int],
+                         n_workers: int) -> int:
+        raise NotImplementedError
+
 
 @registry.register(registry.REDUCER, "topk")
 class TopKReduce(_ErrorFeedbackMean):
@@ -312,6 +334,13 @@ class TopKReduce(_ErrorFeedbackMean):
         return {"comm_dtype": self.comm_dtype, "density": self.density}
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
+        it = jnp.dtype(self.comm_dtype).itemsize
+        return sum(_k_of(n, self.density) * (it + _INDEX_BYTES)
+                   for n in sizes)
+
+    def _accounted_bytes(self, sizes: Sequence[int],
+                         n_workers: int) -> int:
+        # k values in comm_dtype + k int32 coordinates per bucket
         it = jnp.dtype(self.comm_dtype).itemsize
         return sum(_k_of(n, self.density) * (it + _INDEX_BYTES)
                    for n in sizes)
@@ -383,6 +412,17 @@ class TopKExactReduce(TopKReduce):
             total += k * _INDEX_BYTES + min(w * k, n) * it
         return total
 
+    def _accounted_bytes(self, sizes: Sequence[int],
+                         n_workers: int) -> int:
+        # k coordinates for the support all-gather + up to min(W*k, n)
+        # union values per bucket (worker count from the live membership)
+        it = jnp.dtype(self.comm_dtype).itemsize
+        total = 0
+        for n in sizes:
+            k = _k_of(n, self.density)
+            total += k * _INDEX_BYTES + min(n_workers * k, n) * it
+        return total
+
     def _compress(self, b: int, a: jnp.ndarray, rstate: PyTree
                   ) -> jnp.ndarray:
         k = _k_of(a.shape[-1], self.density)
@@ -418,6 +458,12 @@ class RandKReduce(_ErrorFeedbackMean):
                 "seed": self.seed}
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
+        it = jnp.dtype(self.comm_dtype).itemsize
+        return sum(_k_of(n, self.density) * it for n in sizes)
+
+    def _accounted_bytes(self, sizes: Sequence[int],
+                         n_workers: int) -> int:
+        # shared-seed support: k values per bucket, no index payload
         it = jnp.dtype(self.comm_dtype).itemsize
         return sum(_k_of(n, self.density) * it for n in sizes)
 
@@ -486,6 +532,25 @@ class PowerSGDReduce(_ErrorFeedbackMean):
             rows, cols, r = self._dims(n)
             total += (rows + cols) * r * it
         return total
+
+    def _accounted_bytes(self, sizes: Sequence[int],
+                         n_workers: int) -> int:
+        return self.wire_bytes(sizes)
+
+    def wire_model(self, sizes: Sequence[int], n_workers: int) -> dict:
+        """See `MeanAllReduce.wire_model`.  Unlike the sparsifiers, the
+        wire here is the two SKINNY FACTORS, not the dense bucket: both
+        power-iteration rounds go through `_mean_over_workers`, so per
+        bucket the observable down-casts are the (W, rows, r) and
+        (W, cols, r) factor payloads plus the two (1, ·, r) mean-result
+        casts — (W+1)·(rows+cols)·r elements total."""
+        it = jnp.dtype(self.comm_dtype).itemsize
+        factor = 0
+        for n in sizes:
+            rows, cols, r = self._dims(int(n))
+            factor += (rows + cols) * r
+        return {"cast_bytes": (n_workers + 1) * factor * it,
+                "accounted_bytes": self._accounted_bytes(sizes, n_workers)}
 
     def init(self, n_workers: int, plan) -> PyTree:
         state = super().init(n_workers, plan)
@@ -564,6 +629,18 @@ class DenseWindowReduce:
 
     def __getattr__(self, name):
         return getattr(self.inner, name)
+
+    def wire_model(self, sizes: Sequence[int], n_workers: int) -> dict:
+        """Explicit (non-delegated) census: during the catch-up window the
+        wire IS dense — the full (W, bucket) buffers go through
+        `_mean_over_workers` — so both legs use the dense payload, not the
+        inner reducer's compressed accounting.  (``wire_bytes`` stays
+        delegated on purpose: bench columns report the steady-state
+        compressed wire, not the transient window.)"""
+        it = jnp.dtype(self.inner.comm_dtype).itemsize
+        n = sum(int(s) for s in sizes)
+        return {"cast_bytes": (n_workers + 1) * n * it,
+                "accounted_bytes": n * it}
 
     def __call__(self, wire, rstate: PyTree) -> Tuple[List[jnp.ndarray],
                                                       PyTree]:

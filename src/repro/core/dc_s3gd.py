@@ -239,19 +239,25 @@ class DCS3GD:
             # it sits at the top of this step or the tail of the previous
             # one — the bitwise-equal-schedules guarantee rests on this
             fenced = jax.lax.optimization_barrier(wire)
-            if self._reducer_stateless:
-                w_red = self.reducer(fenced)
-            else:
-                w_red, rstate = self.reducer(fenced, state.comm["reducer"])
+            # the `wire` scope tags the reducer body's HLO locations so
+            # repro.analysis.lint can attribute comm_dtype casts to the
+            # simulated wire (dtype-drift / wire-accounting passes)
+            with jax.named_scope("wire"):
+                if self._reducer_stateless:
+                    w_red = self.reducer(fenced)
+                else:
+                    w_red, rstate = self.reducer(fenced,
+                                                 state.comm["reducer"])
         else:
             delta_prev = state.comm["delta_prev"]   # bucketed when buckets>0
             r_in = delta_prev
             fenced = jax.lax.optimization_barrier(delta_prev)
-            if self._reducer_stateless:
-                delta_bar = self.reducer(fenced)
-            else:
-                delta_bar, rstate = self.reducer(fenced,
-                                                 state.comm["reducer"])
+            with jax.named_scope("wire"):
+                if self._reducer_stateless:
+                    delta_bar = self.reducer(fenced)
+                else:
+                    delta_bar, rstate = self.reducer(fenced,
+                                                     state.comm["reducer"])
 
         # --- MPI_Wait materializes a landed buffer: fence the reduction
         # so XLA cannot fuse its final ops into consumer arithmetic (FMA

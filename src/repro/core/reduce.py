@@ -63,6 +63,23 @@ class MeanAllReduce:
         excluded; they multiply dense and compressed payloads alike)."""
         return sum(sizes) * _wire_itemsize(self.comm_dtype)
 
+    def wire_model(self, sizes, n_workers: int) -> dict:
+        """HLO-observable wire-cast census vs the ``wire_bytes`` hand
+        accounting (`repro.analysis.lint` WireAccountingPass).
+
+        ``cast_bytes``: total bytes of down-casts **to** ``comm_dtype``
+        the lowered reducer body performs per invocation (the simulated
+        wire crossings the analyzer can see under the ``wire`` named
+        scope): the (W, n) payload cast plus ``jnp.mean``'s (1, n)
+        result cast back to the input dtype.  ``accounted_bytes`` is the
+        independently-written per-worker payload formula the pass cross
+        checks ``wire_bytes`` against — edit one without the other and
+        the lint gate trips."""
+        it = _wire_itemsize(self.comm_dtype)
+        n = sum(sizes)
+        return {"cast_bytes": (n_workers + 1) * n * it,
+                "accounted_bytes": n * it}
+
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)
         return jax.tree.map(
@@ -104,6 +121,16 @@ class GossipReduce:
         # known here — count the full-ring upper bound)
         return 2 * self.neighbors * sum(sizes) \
             * _wire_itemsize(self.comm_dtype)
+
+    def wire_model(self, sizes, n_workers: int) -> dict:
+        """See `MeanAllReduce.wire_model`.  Gossip down-casts the (W, n)
+        payload ONCE (the rolls then move the already-cast wire, and the
+        accumulator stays f32); the hand accounting charges the payload
+        once per ring hop (2k, the full-ring upper bound)."""
+        it = _wire_itemsize(self.comm_dtype)
+        n = sum(sizes)
+        return {"cast_bytes": n_workers * n * it,
+                "accounted_bytes": 2 * self.neighbors * n * it}
 
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)
@@ -171,6 +198,17 @@ class HierarchicalReduce:
         # payload, conservative)
         return (1 + 2 * self.neighbors) * sum(sizes) \
             * _wire_itemsize(self.comm_dtype)
+
+    def wire_model(self, sizes, n_workers: int) -> dict:
+        """See `MeanAllReduce.wire_model`.  Only the GROUP MEANS cross
+        the slow wire in ``comm_dtype`` (the intra-group mean stays f32),
+        so the lowered body casts a (G, 1, n) buffer — G rows, not W;
+        the hand accounting charges intra (1 hop) + inter (2k hops)."""
+        it = _wire_itemsize(self.comm_dtype)
+        n = sum(sizes)
+        return {"cast_bytes": self.groups * n * it,
+                "accounted_bytes":
+                    (1 + 2 * self.neighbors) * n * it}
 
     def __call__(self, tree: PyTree) -> PyTree:
         dt = jnp.dtype(self.comm_dtype)

@@ -105,18 +105,23 @@ class SSGD:
         if self.buckets:
             plan = self._plan(state.params)
             wire = plan.pack(g32)
-            if self._reducer_stateless:
-                red = self.reducer(wire)
-            else:
-                red, comm["reducer"] = self.reducer(
-                    wire, state.comm["reducer"])
+            # `wire` scope: lets repro.analysis.lint attribute comm_dtype
+            # casts inside the reducer body to the simulated wire
+            with jax.named_scope("wire"):
+                if self._reducer_stateless:
+                    red = self.reducer(wire)
+                else:
+                    red, comm["reducer"] = self.reducer(
+                        wire, state.comm["reducer"])
             grads = plan.unpack(collapse_worker_axis(red))
         else:
             if not self._reducer_stateless:
                 raise ValueError(
                     f"reducer {self.reducer.name!r} needs the bucketed "
                     f"wire: construct with buckets > 0")
-            grads = collapse_worker_axis(self.reducer(g32))
+            with jax.named_scope("wire"):
+                red = self.reducer(g32)
+            grads = collapse_worker_axis(red)
         delta, opt = self.local_optimizer(grads, state.opt, state.params,
                                           {"lr": lr, "weight_decay": wd})
         new_params = jax.tree.map(

@@ -88,6 +88,13 @@ class Engine:
         # (shape, cache_len, sampler, ...) — rebuilt jits used to leak a
         # recompilation into EVERY repeated serve call
         self._oneshot: Optional[OneShotGenerator] = None
+        # retrace bookkeeping (`retrace_stats`): the last `fit` loop's
+        # jitted step and how often the loop had to re-jit it.  A
+        # steady-state loop must keep both at 1/0 — the invariant
+        # repro.analysis.lint's recompile pass gates on (the Engine.generate
+        # per-call-retrace bug class, detectable for every entry point)
+        self._fit_step_fn = None
+        self._fit_rejits = 0
 
     # -- mesh / sharding seam ----------------------------------------------
 
@@ -160,6 +167,42 @@ class Engine:
                        out_shardings=(st_sh, None),
                        donate_argnums=donate_argnums)
 
+    def lower_train_step(self, state: PyTree, batch: PyTree, *,
+                         donate: bool = True):
+        """Lower (without compiling) the jitted train step for the given
+        inputs — ``state``/``batch`` may be ``jax.ShapeDtypeStruct``
+        trees, so no buffers are allocated.  This is the substrate the
+        compiled-program passes in `repro.analysis.lint` read: the
+        returned ``Lowered`` exposes the StableHLO text (donation
+        aliasing, host callbacks, converts, fences, collectives)."""
+        return self.jit_train_step(state, batch,
+                                   donate=donate).lower(state, batch)
+
+    def retrace_stats(self) -> dict:
+        """Jit cache-miss counters for the steady-state entry points:
+        ``fit_cache_size`` (traces taken by the last ``fit`` loop's step
+        — 1 in steady state), ``fit_rejits`` (loop-level re-jits; > 0
+        only across elastic transitions), ``generate_cache_size``
+        (compiled pairs cached by ``generate``).  `repro.analysis.lint`'s
+        recompile pass fails a loop whose counters grow with the
+        iteration count."""
+        fn = self._fit_step_fn
+        return {
+            "fit_cache_size":
+                None if fn is None else int(fn._cache_size()),
+            "fit_rejits": self._fit_rejits,
+            "generate_cache_size":
+                0 if self._oneshot is None else self._oneshot.cache_size,
+        }
+
+    @property
+    def fit_cache_size(self) -> Optional[int]:
+        return self.retrace_stats()["fit_cache_size"]
+
+    @property
+    def generate_cache_size(self) -> int:
+        return self.retrace_stats()["generate_cache_size"]
+
     def fit(self, state: PyTree, batch_fn: Callable[..., PyTree], *,
             steps: int, start: int = 0, log_every: int = 10,
             verbose: bool = True, measure_skew: bool = False,
@@ -228,6 +271,7 @@ class Engine:
 
         batch = make_batch(start) if steps > start else None
         step_fn = self.jit_train_step(state, batch)
+        self._fit_step_fn, self._fit_rejits = step_fn, 0
         stateful = stateful_policy()
         measuring = measure_skew and (stateful or elastic)
         n_workers = cur_w if measuring else 0
@@ -258,10 +302,23 @@ class Engine:
                 batch = make_batch(it)
             if rejit:
                 step_fn = self.jit_train_step(state, batch)
+                self._fit_step_fn = step_fn
+                self._fit_rejits += 1
             ts = time.perf_counter()
             state, metrics = step_fn(state, batch)
             if measuring:
-                jax.block_until_ready(metrics)
+                # ONE host round-trip per measured step: when the policy
+                # is stateful the admit flag must come to the host anyway,
+                # so that device_get IS the timing sync — a separate
+                # block_until_ready before it would pay a second
+                # dispatch-queue drain for nothing (the fit metric fetch
+                # the lint host-sync audit flagged)
+                if stateful:
+                    admit = float(jax.device_get(
+                        metrics.get("ssp_admit", 1.0)))
+                else:
+                    jax.block_until_ready(metrics)
+                    admit = 1.0
                 dt = time.perf_counter() - ts
                 if it >= warm_until:
                     durs = list(skew_probe(it, dt)) \
@@ -271,8 +328,7 @@ class Engine:
                         else None
                     if slow is not None:
                         durs = [d * f for d, f in zip(durs, slow)]
-                    if stateful and float(jax.device_get(
-                            metrics.get("ssp_admit", 1.0))) == 0.0:
+                    if stateful and admit == 0.0:
                         # the policy revoked the window and did its
                         # blocking pull: the sync resolved the skew, so
                         # the measured counters collapse to the leader

@@ -122,10 +122,15 @@ def issue(reducer, wire: List, rstate: Optional[PyTree] = None
     guarantee for reducers whose last ops are multiplies (gossip's
     weighted neighbor sums)."""
     wire = jax.lax.optimization_barrier(wire)
-    if rstate is None:
-        reduced = reducer(wire)
-    else:
-        reduced, rstate = reducer(wire, rstate)
+    # the `wire` scope tags the reducer body's HLO locations so
+    # repro.analysis.lint can attribute comm_dtype casts to the simulated
+    # wire (dtype-drift / wire-accounting passes) — same scope the inline
+    # schedule uses around its reducer call
+    with jax.named_scope("wire"):
+        if rstate is None:
+            reduced = reducer(wire)
+        else:
+            reduced, rstate = reducer(wire, rstate)
     # fence the landed side too: the stored result must be the same
     # values the inline program would hand to its consumers as a plain
     # array, not an expression XLA can re-fuse into the epilogue

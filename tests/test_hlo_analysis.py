@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.analysis.hlo import analyze_hlo, collective_bytes
+from repro.analysis.hlo import (analyze_hlo, collective_bytes, count_ops,
+                                stablehlo_op_counts)
 
 
 def _compile(f, *args):
@@ -71,14 +72,53 @@ def test_gather_traffic_not_full_table():
     assert st.traffic_bytes < 50_000 * 64 * 4 * 0.5, st.traffic_bytes
 
 
+def test_topk_tuple_result_counted():
+    """`lax.top_k` lowers to tuple-result ops (sort / custom-call): the
+    shape parser must not skip them in the traffic accounting (the old
+    `dtype[dims]`-only regex silently dropped every tuple result)."""
+    x = jnp.zeros((4, 330))
+    c = _compile(lambda v: jax.lax.top_k(v, 8), x)
+    st = analyze_hlo(c.as_text())
+    assert st.traffic_bytes > 0.0, st.traffic_bytes
+    # and at least the input + the (values, indices) outputs are charged
+    floor = (4 * 330 + 4 * 8 + 4 * 8) * 4 * 0.5
+    assert st.traffic_bytes > floor, (st.traffic_bytes, floor)
+
+
+def test_bounded_dynamic_dims_parse():
+    """`<=N`-bounded dynamic dims (sparse/dedup outputs) must charge the
+    bound — the allocation — not parse to zero elements."""
+    from repro.analysis.hlo import _shape_info
+    nbytes, dims, dt = _shape_info("f32[<=8,4]")
+    assert dims == [8, 4] and nbytes == 8 * 4 * 4 and dt == "f32"
+
+
+def test_stablehlo_op_counts_match_substring_counts():
+    """The shared parser's prefix semantics are exactly the historical
+    `txt.count("stablehlo.<prefix>")` the op-count pins were written
+    against."""
+    def f(x):
+        r = jnp.mean(x.astype(jnp.bfloat16), axis=0).astype(jnp.float32)
+        return jnp.sum(r), jnp.max(r)
+    txt = jax.jit(f).lower(jnp.zeros((4, 64))).as_text()
+    for prefix in ("reduce", "convert", "add"):
+        assert count_ops(txt, prefix) == txt.count(f"stablehlo.{prefix}")
+    counts = stablehlo_op_counts(txt)
+    assert counts["convert"] == txt.count("stablehlo.convert")
+    assert sum(v for k, v in counts.items() if k.startswith("reduce")) \
+        == txt.count("stablehlo.reduce")
+
+
 # ---------------------------------------------------------------------------
 # bucketed comm: wire op counts scale with #buckets, not #leaves
 # ---------------------------------------------------------------------------
 
 
 def _lowered_op_counts(fn, *args):
+    # the shared pass-framework parser (repro.analysis.lint uses the same
+    # one): prefix semantics identical to the historical substring counts
     txt = jax.jit(fn).lower(*args).as_text()
-    return txt.count("stablehlo.reduce"), txt.count("stablehlo.convert")
+    return count_ops(txt, "reduce"), count_ops(txt, "convert")
 
 
 def _many_leaf_tree(n_leaves=12, W=4):

@@ -1,0 +1,483 @@
+"""The static analyzer catches what it claims to catch.
+
+Two halves, mirroring ``repro.analysis.lint``'s layers:
+
+* **clean grid** — representative grid points produce zero findings
+  (the committed ``LINT_BASELINE.json`` is empty, so any finding on the
+  real code is a CI failure);
+* **seeded true positives** — every pass must fire on a deliberately
+  broken program: a dropped-donation step, a host-callback step, a
+  retracing fit loop, a dtype-drifting step, an unfenced pipeline, a
+  lying wire accounting, and one source fixture per AST rule.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import astlint
+from repro.analysis.lint import (PASSES, DonationPass, DtypeDriftPass,
+                                 FencePass, GridPoint, HostSyncPass,
+                                 Program, RetracePass, WireAccountingPass,
+                                 iter_grid, run_point, scoped_converts)
+from repro.analysis.report import Finding
+from repro.core.api import TrainState
+from repro.launch.engine import Engine
+
+
+def _by_pass(findings, name):
+    return [f for f in findings if f.pass_name == name]
+
+
+# ---------------------------------------------------------------------------
+# the grid itself
+# ---------------------------------------------------------------------------
+
+
+def test_grid_enumeration_valid_points_only():
+    pts = list(iter_grid())
+    names = [p.name for p in pts]
+    assert len(names) == len(set(names))
+    for p in pts:
+        # compressed reducers only on the bucketed wire; overlap only on
+        # bucketed stale-family points
+        if p.reducer in ("topk", "topk_exact", "randk", "powersgd"):
+            assert p.buckets
+        if p.overlap:
+            assert p.buckets and p.algo != "ssgd"
+    assert GridPoint("dc_s3gd", "topk", 4, True) in pts
+    assert GridPoint("ssgd", "mean_allreduce", 0, False) in pts
+
+
+@pytest.mark.parametrize("point", [
+    GridPoint("dc_s3gd", "mean_allreduce", 4, False),
+    GridPoint("dc_s3gd", "topk", 4, True),
+    GridPoint("ssgd", "gossip", 0, False),
+])
+def test_clean_grid_points_have_zero_findings(point):
+    assert run_point(Program(point)) == []
+
+
+# ---------------------------------------------------------------------------
+# seeded true positives, one per pass
+# ---------------------------------------------------------------------------
+
+
+def test_donation_pass_catches_dropped_donation():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    # the broken program: same step, donation silently dropped
+    prog._lowered = prog.engine.lower_train_step(prog.state, prog.batch,
+                                                 donate=False)
+    found = _by_pass(DonationPass().run(prog), "donation")
+    assert found and found[0].severity == "error"
+    assert f"0/{prog.n_state_leaves}" in found[0].message
+
+
+def test_donation_pass_clean_on_donated_step():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    assert DonationPass().run(prog) == []
+
+
+class _StubProg:
+    """Duck-typed Program carrying a hand-built lowering."""
+
+    def __init__(self, name="stub", **kw):
+        self.name = name
+        for k, v in kw.items():
+            setattr(self, k, v)
+
+
+def test_host_sync_pass_catches_pure_callback():
+    def bad_step(x):
+        y = jax.pure_callback(lambda v: v, jax.ShapeDtypeStruct((), x.dtype),
+                              jnp.sum(x))
+        return x * y
+
+    txt = jax.jit(bad_step).lower(jnp.zeros((8,))).as_text()
+    prog = _StubProg(stablehlo=txt)
+    found = HostSyncPass().run(prog)
+    assert found and all(f.severity == "error" for f in found)
+    assert any("callback" in f.op for f in found)
+
+
+def test_retrace_pass_catches_deliberately_retracing_loop():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    # the deliberately retracing loop: batch shape varies per iteration,
+    # so the SAME jitted step re-traces every step (the Engine.generate
+    # bug class)
+    prog.batch_fn = lambda it: {
+        "x": jnp.ones((prog.n_workers, 2 + it, prog.model.DIM))}
+    found = _by_pass(RetracePass().run(prog), "recompile")
+    assert found and found[0].severity == "error"
+    assert "traced its step 3" in found[0].message
+
+
+def test_retrace_pass_clean_on_steady_state_loop():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    assert RetracePass().run(prog) == []
+    stats = prog.engine.retrace_stats()
+    assert stats["fit_cache_size"] == 1 and stats["fit_rejits"] == 0
+
+
+class _DriftAlg:
+    """A step that silently narrows the carried params to bf16 — the
+    structural dtype-drift the pass exists for."""
+
+    name = "driftalg"
+    n_workers = 1
+
+    def init(self, params):
+        return TrainState(params, {}, {}, jnp.zeros((), jnp.int32))
+
+    def step(self, state, batch, *, loss_fn):
+        new_params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16), state.params)
+        return TrainState(new_params, state.opt, state.comm,
+                          state.step + 1), {"loss": jnp.float32(0)}
+
+
+class _Toy:
+    cfg = None
+    DIM = 8
+
+    def init(self, key):
+        return {"w": jnp.ones((self.DIM,), jnp.float32)}
+
+    def loss(self, params, batch):
+        return jnp.sum(params["w"] * batch["x"])
+
+
+def test_dtype_drift_pass_catches_structural_drift():
+    model = _Toy()
+    alg = _DriftAlg()
+    engine = Engine(model, alg)
+    state = alg.init(model.init(jax.random.PRNGKey(0)))
+    batch = {"x": jnp.ones((model.DIM,), jnp.float32)}
+    prog = _StubProg(engine=engine, state=state, batch=batch,
+                     comm_mlir="bf16",
+                     stablehlo_debug=engine.lower_train_step(
+                         state, batch, donate=False)
+                     .compiler_ir(dialect="stablehlo")
+                     .operation.get_asm(enable_debug_info=True))
+    found = _by_pass(DtypeDriftPass().run(prog), "dtype-drift")
+    assert any(f.op == "state-leaf" and "float32 in, bfloat16 out"
+               in f.message for f in found)
+
+
+def test_dtype_drift_pass_catches_forbidden_f16_cast():
+    """A float16 round-trip inside the step is neither the compute dtype
+    nor the declared comm_dtype — the census must flag the down-cast
+    even though the state dtypes survive structurally."""
+    model = _Toy()
+
+    class _F16Alg(_DriftAlg):
+        def step(self, state, batch, *, loss_fn):
+            new_params = jax.tree.map(
+                lambda p: p.astype(jnp.float16).astype(p.dtype),
+                state.params)
+            return TrainState(new_params, state.opt, state.comm,
+                              state.step + 1), {"loss": jnp.float32(0)}
+
+    alg = _F16Alg()
+    engine = Engine(model, alg)
+    state = alg.init(model.init(jax.random.PRNGKey(0)))
+    batch = {"x": jnp.ones((model.DIM,), jnp.float32)}
+    prog = _StubProg(engine=engine, state=state, batch=batch,
+                     comm_mlir="bf16",
+                     stablehlo_debug=engine.lower_train_step(
+                         state, batch, donate=False)
+                     .compiler_ir(dialect="stablehlo")
+                     .operation.get_asm(enable_debug_info=True))
+    found = _by_pass(DtypeDriftPass().run(prog), "dtype-drift")
+    assert any(f.op == "convert->f16" for f in found), found
+
+
+def test_dtype_drift_pass_catches_wire_cast_outside_wire_scope():
+    """A comm_dtype down-cast NOT under the `wire` named scope is a wire
+    cast leaked into compute — the bf16-convert-as-drift suspect the
+    scope attribution exists to separate."""
+    model = _Toy()
+
+    class _LeakAlg(_DriftAlg):
+        def step(self, state, batch, *, loss_fn):
+            new_params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16).astype(p.dtype),
+                state.params)
+            return TrainState(new_params, state.opt, state.comm,
+                              state.step + 1), {"loss": jnp.float32(0)}
+
+    alg = _LeakAlg()
+    engine = Engine(model, alg)
+    state = alg.init(model.init(jax.random.PRNGKey(0)))
+    batch = {"x": jnp.ones((model.DIM,), jnp.float32)}
+    prog = _StubProg(engine=engine, state=state, batch=batch,
+                     comm_mlir="bf16",
+                     stablehlo_debug=engine.lower_train_step(
+                         state, batch, donate=False)
+                     .compiler_ir(dialect="stablehlo")
+                     .operation.get_asm(enable_debug_info=True))
+    found = _by_pass(DtypeDriftPass().run(prog), "dtype-drift")
+    assert any("outside the 'wire' scope" in f.message for f in found)
+
+
+def test_fence_pass_catches_unfenced_pipeline(monkeypatch):
+    # the unfenced pipeline program: neutralize every fence while the
+    # overlap step lowers
+    monkeypatch.setattr(jax.lax, "optimization_barrier", lambda x: x)
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, True))
+    found = _by_pass(FencePass().run(prog), "fence")
+    assert any(f.op == "optimization_barrier" for f in found), found
+
+
+def test_fence_pass_catches_collective_count_mismatch():
+    real = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, True))
+    inline = real.inline_sibling()
+    # the broken schedule: one duplicated reduce op
+    prog = _StubProg(
+        name=real.name, point=real.point,
+        stablehlo=real.stablehlo
+        + "\n  %bad = stablehlo.reduce_dupe",
+        inline_sibling=lambda: inline)
+    found = _by_pass(FencePass().run(prog), "fence")
+    assert any(f.op == "stablehlo.reduce" and "duplicated or dropped"
+               in f.message for f in found)
+
+
+def test_fence_pass_clean_on_real_pipeline():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, True))
+    assert FencePass().run(prog) == []
+
+
+def test_wire_accounting_catches_lying_wire_bytes():
+    prog = Program(GridPoint("dc_s3gd", "topk", 4, False))
+    red = prog.alg.reducer
+    # the drifted bench column: hand accounting edited without the model
+    red.wire_bytes = lambda sizes: 1
+    found = _by_pass(WireAccountingPass().run(prog), "wire-accounting")
+    assert any(f.op == "wire-bytes" for f in found), found
+
+
+def test_wire_accounting_catches_lying_cast_model():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    red = prog.alg.reducer
+    true_model = red.wire_model(prog.wire_sizes, prog.n_workers)
+    red.wire_model = lambda sizes, n: {
+        "cast_bytes": true_model["cast_bytes"] + 2,
+        "accounted_bytes": true_model["accounted_bytes"]}
+    found = _by_pass(WireAccountingPass().run(prog), "wire-accounting")
+    assert any(f.op == "cast-census" for f in found), found
+
+
+def test_wire_accounting_catches_inflating_compression():
+    prog = Program(GridPoint("dc_s3gd", "topk", 4, False))
+    red = prog.alg.reducer
+    dense = sum(prog.wire_sizes) * 2
+    red.wire_bytes = lambda sizes: dense * 10
+    red.wire_model = lambda sizes, n: {
+        "cast_bytes": red._lint_true_cast, "accounted_bytes": dense * 10}
+    red._lint_true_cast = type(red).wire_model(
+        red, prog.wire_sizes, prog.n_workers)["cast_bytes"]
+    found = _by_pass(WireAccountingPass().run(prog), "wire-accounting")
+    assert any(f.op == "compression" for f in found), found
+
+
+def test_scoped_converts_attribute_wire_scope():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 4, False))
+    cs = scoped_converts(prog.stablehlo_debug)
+    wire = [c for c in cs if "/wire/" in c.scope]
+    assert wire, "no converts attributed to the wire scope"
+    # down-casts to the declared comm dtype happen ONLY under the scope
+    leaked = [c for c in cs if c.dst == "bf16" and c.src == "f32"
+              and "/wire/" not in c.scope]
+    assert leaked == []
+
+
+# ---------------------------------------------------------------------------
+# Engine counters + the fit single-host-pull pin (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_retrace_stats_before_any_fit():
+    prog = Program(GridPoint("dc_s3gd", "mean_allreduce", 0, False))
+    stats = prog.engine.retrace_stats()
+    assert stats == {"fit_cache_size": None, "fit_rejits": 0,
+                     "generate_cache_size": 0}
+
+
+def test_fit_measuring_stateful_single_host_pull_per_step(monkeypatch):
+    """The measuring+stateful fit path pays exactly ONE host round trip
+    per step: the ``ssp_admit`` device_get doubles as the timing sync —
+    no separate ``block_until_ready`` (the double-sync the lint audit
+    flagged in ``Engine.fit``)."""
+    from repro.core import registry
+    from repro.core.types import DCS3GDConfig
+    from tests.helpers import quadratic_problem, stack_batches
+
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+    cfg = DCS3GDConfig(total_steps=4, warmup_steps=1, ssp_threshold=4)
+    W = 2
+    alg = registry.make("dc_s3gd", cfg, n_workers=W,
+                        staleness="dynamic_ssp")
+    assert not alg.staleness.stateless
+
+    class _M:
+        cfg = None
+
+        def loss(self, p, b):
+            return loss_fn(p, b)
+
+    engine = Engine(_M(), alg)
+    state = alg.init(init)
+
+    calls = {"get": 0, "block": 0}
+    real_get = jax.device_get
+
+    def counting_get(x):
+        calls["get"] += 1
+        return real_get(x)
+
+    def counting_block(x):
+        calls["block"] += 1
+        return x
+
+    import repro.launch.engine as eng_mod
+    monkeypatch.setattr(eng_mod.jax, "device_get", counting_get)
+    monkeypatch.setattr(eng_mod.jax, "block_until_ready", counting_block)
+
+    steps = 3
+    engine.fit(state, lambda it: stack_batches(batch_fn, it, W),
+               steps=steps, log_every=100, verbose=False,
+               measure_skew=True)
+    # one admit pull per step + one metrics pull per log boundary
+    # (step 0 and the final step) — and ZERO block_until_ready syncs
+    assert calls["block"] == 0
+    assert calls["get"] == steps + 2
+
+
+def test_fit_measuring_stateless_policy_still_syncs(monkeypatch):
+    """Without a stateful policy there is no admit flag to pull — the
+    measuring loop must still sync each step (block_until_ready) or the
+    measured durations are dispatch-queue noise."""
+    from repro.cluster import ClusterSpec, Membership
+    from repro.core import registry
+    from repro.core.types import DCS3GDConfig
+    from tests.helpers import quadratic_problem, stack_batches
+
+    loss_fn, init, _, batch_fn = quadratic_problem(n=8)
+    W = 2
+    alg = registry.make("dc_s3gd", DCS3GDConfig(total_steps=4),
+                        n_workers=W)
+
+    class _M:
+        cfg = None
+
+        def loss(self, p, b):
+            return loss_fn(p, b)
+
+    engine = Engine(_M(), alg)
+    state = alg.init(init)
+    membership = Membership(alg, ClusterSpec.uniform(W))
+
+    calls = {"block": 0}
+    real_block = jax.block_until_ready
+
+    def counting_block(x):
+        calls["block"] += 1
+        return real_block(x)
+
+    import repro.launch.engine as eng_mod
+    monkeypatch.setattr(eng_mod.jax, "block_until_ready", counting_block)
+
+    steps = 3
+    engine.fit(state,
+               lambda it, w: stack_batches(batch_fn, it, w),
+               steps=steps, log_every=100, verbose=False,
+               measure_skew=True, membership=membership)
+    assert calls["block"] == steps
+
+
+# ---------------------------------------------------------------------------
+# AST lint: one fixture per rule + suppression + the real tree is clean
+# ---------------------------------------------------------------------------
+
+
+_AST_FIXTURES = {
+    "algo-branch": """
+        def pick(algo):
+            if algo == "dc_s3gd":
+                return 1
+            return 2
+    """,
+    "algo-import": """
+        from repro.core.dc_s3gd import DCS3GD
+    """,
+    "wallclock-cluster": """
+        import time
+
+        def transition_log():
+            return time.time()
+    """,
+    "host-pull-in-traced": """
+        import jax
+
+        def step_body(x):
+            return jax.device_get(x)
+    """,
+    "trainstate-mutation": """
+        def advance(state):
+            state.step = state.step + 1
+            return state
+    """,
+}
+
+_AST_RULE_DIR = {
+    "algo-branch": "repro/launch",
+    "algo-import": "repro/launch",
+    "wallclock-cluster": "repro/cluster",
+    "host-pull-in-traced": "repro/core",
+    "trainstate-mutation": "repro/launch",
+}
+
+
+@pytest.mark.parametrize("rule", sorted(_AST_FIXTURES))
+def test_astlint_catches_seeded_violation(rule, tmp_path):
+    d = tmp_path / _AST_RULE_DIR[rule]
+    d.mkdir(parents=True)
+    (d / "fixture.py").write_text(textwrap.dedent(_AST_FIXTURES[rule]))
+    findings = astlint.lint_paths(tmp_path)
+    assert [f for f in findings if f.pass_name == f"ast.{rule}"], findings
+    # every finding pins a real file:line
+    for f in findings:
+        assert f.location.startswith(str(
+            (d / "fixture.py").relative_to(tmp_path)))
+
+
+def test_astlint_suppression_comment(tmp_path):
+    d = tmp_path / "repro" / "launch"
+    d.mkdir(parents=True)
+    (d / "f.py").write_text(
+        'def pick(algo):\n'
+        '    return algo == "ssgd"  # lint: allow(algo-branch)\n')
+    assert astlint.lint_paths(tmp_path) == []
+
+
+def test_astlint_rules_scoped_to_their_packages(tmp_path):
+    """The same code is fine OUTSIDE the package its rule guards."""
+    d = tmp_path / "repro" / "launch"
+    d.mkdir(parents=True)
+    (d / "f.py").write_text(
+        "import time\n\ndef t():\n    return time.time()\n")
+    assert astlint.lint_paths(tmp_path) == []
+
+
+def test_astlint_registry_may_branch(tmp_path):
+    d = tmp_path / "repro" / "core"
+    d.mkdir(parents=True)
+    (d / "registry.py").write_text(
+        'def make(name):\n    return name == "dc_s3gd"\n')
+    assert astlint.lint_paths(tmp_path) == []
+
+
+def test_astlint_real_source_tree_is_clean():
+    assert astlint.lint_paths("src") == []

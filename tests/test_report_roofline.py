@@ -1,0 +1,240 @@
+"""Coverage for `repro.analysis.roofline` and `repro.analysis.report`.
+
+The roofline terms (collective ring factors per kind, while-trip
+multiplication including nested scans, model-FLOPs accounting) and the
+``repro.lint/v1`` findings schema (round-trip, severity ranking,
+baseline matching) were previously exercised only indirectly through the
+dry-run artifacts.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.hlo import _coll_traffic, _group_size, analyze_hlo
+from repro.analysis.report import (LINT_SCHEMA, Finding, findings_report,
+                                   load_baseline, new_findings,
+                                   parse_report, render_findings)
+from repro.analysis.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                                     analyze, model_flops_per_step)
+from repro.core.types import InputShape
+
+
+# ---------------------------------------------------------------------------
+# collective ring factors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,n,b,expected", [
+    ("all-reduce", 4, 1024, 2.0 * 3 / 4 * 1024),
+    ("all-reduce", 2, 1024, 1024.0),
+    ("all-gather", 4, 1024, 3 / 4 * 1024),
+    ("all-to-all", 8, 1024, 7 / 8 * 1024),
+    ("ragged-all-to-all", 8, 1024, 7 / 8 * 1024),
+    ("reduce-scatter", 4, 1024, 3.0 * 1024),     # result is the 1/n shard
+    ("collective-permute", 4, 1024, 1024.0),     # one hop, full payload
+])
+def test_coll_traffic_ring_factors(kind, n, b, expected):
+    assert _coll_traffic(kind, b, n) == pytest.approx(expected)
+
+
+def test_coll_traffic_single_participant_is_free():
+    for kind in ("all-reduce", "all-gather", "reduce-scatter"):
+        assert _coll_traffic(kind, 4096, 1) == 0.0
+
+
+def test_group_size_parsing():
+    assert _group_size("all-reduce(%x), replica_groups={{0,1,2,3}}") == 4
+    assert _group_size("all-gather(%x), replica_groups=[2,8]<=[16]") == 8
+    assert _group_size("all-reduce(%x)") == 2  # conservative default
+
+
+# ---------------------------------------------------------------------------
+# trip-count multiplication over hand-written HLO (collective side; the
+# dot-flops side is pinned in tests/test_hlo_analysis.py)
+# ---------------------------------------------------------------------------
+
+
+_WHILE_COLL_HLO = """\
+HloModule m
+
+%inner_body (y: f32[8,16]) -> f32[8,16] {
+  %y = f32[8,16] parameter(0)
+  ROOT %ar = f32[8,16] all-reduce(%y), replica_groups={{0,1,2,3}}
+}
+
+%inner_cond (y: f32[8,16]) -> pred[] {
+  %y = f32[8,16] parameter(0)
+  %ci = s32[] constant(3)
+  ROOT %lt = pred[] compare(%ci, %ci), direction=LT
+}
+
+%body (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16] parameter(0)
+  ROOT %w2 = f32[8,16] while(%x), condition=%inner_cond, body=%inner_body
+}
+
+%cond (x: f32[8,16]) -> pred[] {
+  %x = f32[8,16] parameter(0)
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%c, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  ROOT %w = f32[8,16] while(%p0), condition=%cond, body=%body
+}
+"""
+
+
+def test_nested_while_multiplies_collective_traffic():
+    st = analyze_hlo(_WHILE_COLL_HLO)
+    per_call = 2.0 * 3 / 4 * (8 * 16 * 4)
+    # outer trips (5) x inner trips (3) x one ring all-reduce per call
+    assert st.coll_bytes == pytest.approx(15 * per_call)
+    assert st.coll_breakdown["all-reduce"] == pytest.approx(15 * per_call)
+    assert st.coll_counts["all-reduce"] == 1  # one op, multiplied by trips
+
+
+# ---------------------------------------------------------------------------
+# roofline terms end-to-end on a compiled scan program
+# ---------------------------------------------------------------------------
+
+
+class _Cfg:
+    """Minimal ModelConfig stand-in for the FLOPs formula."""
+
+    def n_active_params(self):
+        return 1_000_000
+
+
+def test_model_flops_per_step_train_vs_serve_multiplier():
+    cfg = _Cfg()
+    train = InputShape("t", seq_len=128, global_batch=4, kind="train")
+    prefill = InputShape("p", seq_len=128, global_batch=4, kind="prefill")
+    assert model_flops_per_step(cfg, train, 1) == \
+        6.0 * cfg.n_active_params() * train.tokens_per_step
+    # forward-only shapes use the 2x multiplier (no backward pass)
+    assert model_flops_per_step(cfg, prefill, 1) == \
+        2.0 * cfg.n_active_params() * prefill.tokens_per_step
+    # the chips division is explicit
+    assert model_flops_per_step(cfg, train, 8) == \
+        model_flops_per_step(cfg, train, 1) / 8
+
+
+def test_analyze_scan_program_terms_and_bottleneck():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    compiled = jax.jit(f).lower(jnp.zeros((8, 64)),
+                                jnp.zeros((64, 64))).compile()
+    cfg = _Cfg()
+    shape = InputShape("t", seq_len=16, global_batch=2, kind="train")
+    ro = analyze(compiled, cfg, shape, n_chips=1)
+
+    # the while-trip multiplication feeds straight into the compute term
+    assert ro.flops >= 2 * 8 * 64 * 64 * 7
+    assert ro.compute_s == pytest.approx(ro.flops / PEAK_FLOPS_BF16)
+    assert ro.memory_s == pytest.approx(ro.hbm_bytes / HBM_BW)
+    assert ro.collective_s == pytest.approx(ro.coll_bytes / ICI_BW)
+    # single device: no collective traffic, and the bottleneck is the max
+    # of the three terms
+    assert ro.coll_bytes == 0.0
+    terms = {"compute": ro.compute_s, "memory": ro.memory_s,
+             "collective": ro.collective_s}
+    assert ro.bottleneck == max(terms, key=terms.get)
+    assert ro.useful_flops_ratio == pytest.approx(
+        model_flops_per_step(cfg, shape, 1) / ro.flops)
+    d = ro.to_dict()
+    assert d["bottleneck"] == ro.bottleneck
+    assert "dot_flops" in d["coll_breakdown"]
+
+
+# ---------------------------------------------------------------------------
+# repro.lint/v1 report schema
+# ---------------------------------------------------------------------------
+
+
+def _sample_findings():
+    return [
+        Finding(pass_name="wire-accounting", severity="warning",
+                message="observed 10 bytes", program="dc_s3gd/topk/b4/in",
+                op="cast-census"),
+        Finding(pass_name="donation", severity="error",
+                message="3/36 leaves donated",
+                program="dc_s3gd/topk/b4/in", op="tf.aliasing_output"),
+        Finding(pass_name="ast.algo-branch", severity="error",
+                message="branch on 'ssgd'",
+                location="repro/launch/train.py:42"),
+    ]
+
+
+def test_report_round_trip_and_severity_ranking():
+    meta = {"grid": ["dc_s3gd/topk/b4/in"], "model": "toy"}
+    doc = findings_report(_sample_findings(), meta)
+    assert doc["schema"] == LINT_SCHEMA
+    assert doc["counts"] == {"error": 2, "warning": 1, "info": 0}
+    # errors rank before warnings
+    sevs = [f["severity"] for f in doc["findings"]]
+    assert sevs == sorted(sevs, key=("error", "warning", "info").index)
+
+    back, back_meta = parse_report(json.loads(json.dumps(doc)))
+    assert back_meta == meta
+    assert set(f.key for f in back) == \
+        set(f.key for f in _sample_findings())
+    assert back[0].severity == "error"
+
+
+def test_parse_report_rejects_wrong_schema():
+    with pytest.raises(ValueError):
+        parse_report({"schema": "something/else", "findings": []})
+
+
+def test_finding_key_excludes_message():
+    a = Finding(pass_name="donation", severity="error", message="v1",
+                program="p", op="o", location="l")
+    b = Finding(pass_name="donation", severity="error", message="v2 drift",
+                program="p", op="o", location="l")
+    assert a.key == b.key
+    c = Finding(pass_name="donation", severity="error", message="v1",
+                program="p2", op="o", location="l")
+    assert a.key != c.key
+
+
+def test_finding_rejects_unknown_severity():
+    with pytest.raises(AssertionError):
+        Finding(pass_name="x", severity="fatal", message="m")
+
+
+def test_baseline_workflow(tmp_path):
+    findings = _sample_findings()
+    base_path = tmp_path / "baseline.json"
+    base_path.write_text(json.dumps(findings_report(findings[:2])))
+
+    baseline = load_baseline(base_path)
+    assert len(baseline) == 2
+    fresh = new_findings(findings, baseline)
+    assert [f.pass_name for f in fresh] == ["ast.algo-branch"]
+    # message drift does NOT make a baselined finding new again
+    drifted = Finding(pass_name=findings[0].pass_name,
+                      severity=findings[0].severity,
+                      message="observed 999 bytes",
+                      program=findings[0].program, op=findings[0].op)
+    assert new_findings([drifted], baseline) == []
+
+
+def test_load_baseline_missing_file_is_empty():
+    assert load_baseline("/nonexistent/baseline.json") == set()
+
+
+def test_render_findings_console_form():
+    out = render_findings(_sample_findings())
+    lines = out.splitlines()
+    assert len(lines) == 3
+    assert lines[0].startswith("[error")
+    assert "dc_s3gd/topk/b4/in" in out and "repro/launch/train.py:42" in out
+    assert render_findings([]) == "no findings"
