@@ -37,6 +37,15 @@ elastic membership transition (W=8 -> W=7 through
 ``repro.cluster``'s collapse-to-consensus reshard): ``resize_ms`` for
 the reshard itself and ``rejit_first_step_ms`` for the first
 (re-compiled) step at the new worker count.
+
+Quantized wire: every row records ``wire_dtype`` and the grid adds
+``dc_s3gd`` x ``{mean_allreduce, topk}`` rows at ``comm_dtype="int8"``
+— the dense yardstick of ``wire_compression`` is always priced at f32
+so those rows read ~4x / ~80x against the same baseline (CI gates
+int8 >= 3x).  A top-level ``autotune`` entry holds the
+`repro.analysis.autotune` train probe (buckets x plan_block, the
+default config always measured alongside the candidates), which CI
+gates at tuned <= default ms/step.
 """
 from __future__ import annotations
 
@@ -65,12 +74,15 @@ SMOKE_JSON_NAME = "BENCH_step_time.smoke.json"
 
 
 def _build(algo: str, reducer: str, use_kernels: bool, buckets: int,
-           model, n_workers: int, steps: int, overlap: bool = False):
+           model, n_workers: int, steps: int, overlap: bool = False,
+           comm_dtype: str = None):
     from repro.core import registry
     from repro.core.types import DCS3GDConfig
     cfg = DCS3GDConfig(learning_rate=0.05, momentum=0.9, lambda0=0.2,
                        warmup_steps=1, total_steps=max(steps, 2))
-    return registry.make(algo, cfg, n_workers=n_workers, reducer=reducer,
+    red = registry.make_reducer(reducer, cfg, **(
+        {"comm_dtype": comm_dtype} if comm_dtype else {}))
+    return registry.make(algo, cfg, n_workers=n_workers, reducer=red,
                          use_kernels=use_kernels, buckets=buckets,
                          overlap=overlap)
 
@@ -102,10 +114,8 @@ def _wire_columns(alg, algo: str, state) -> dict:
     ``wire_compression`` is the one-shot dense payload (mean_allreduce
     at the same layout/``comm_dtype``) over the reducer's own payload:
     1.0 for the dense mean, BELOW 1 for multi-hop topologies (gossip /
-    hierarchical move the payload once per hop), and the headline
-    10–100x for the compressed reducers."""
-    import jax.numpy as jnp
-
+    hierarchical move the payload once per hop), the headline 10–100x
+    for the compressed reducers, and ~4x for an int8 wire."""
     red = getattr(alg, "reducer", None)
     if red is None or not hasattr(red, "wire_bytes"):
         return {}
@@ -117,21 +127,24 @@ def _wire_columns(alg, algo: str, state) -> dict:
         sizes = [x.size // (x.shape[0] if stacked else 1)
                  for x in jax.tree.leaves(state.params)]
     wire = int(red.wire_bytes(sizes))
-    dense = sum(sizes) * jnp.dtype(getattr(red, "comm_dtype",
-                                           "float32")).itemsize
+    # the compression reference is the one-shot DENSE F32 payload at the
+    # same layout — a fixed yardstick, so an int8 mean_allreduce row
+    # shows ~4x, not 1x against itself (bitwise unchanged for the
+    # pre-quantization rows: their comm_dtype was float32)
+    dense = sum(sizes) * 4
     return {"wire_bytes_per_step": wire,
             "wire_compression": round(dense / max(wire, 1), 2)}
 
 
 def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
                 model, data, *, n_workers: int, batch_per_worker: int,
-                steps: int, warmup: int) -> dict:
+                steps: int, warmup: int, comm_dtype: str = None) -> dict:
     from repro.data import worker_batches
     from repro.launch.engine import Engine
 
     def run(overlap: bool):
         alg = _build(algo, reducer, use_kernels, buckets, model,
-                     n_workers, steps, overlap)
+                     n_workers, steps, overlap, comm_dtype=comm_dtype)
         engine = Engine(model, alg)
         state = engine.init_state(jax.random.PRNGKey(0))
         step_fn = engine.jit_train_step()
@@ -161,7 +174,9 @@ def time_config(algo: str, reducer: str, use_kernels: bool, buckets: int,
     if algo != "ssgd" and buckets:
         overlap_ms, _ = run(overlap=True)
     return {"algo": algo, "reducer": reducer, "use_kernels": use_kernels,
-            "buckets": buckets, "ms_per_step": round(ms, 3),
+            "buckets": buckets,
+            "wire_dtype": comm_dtype or "float32",
+            "ms_per_step": round(ms, 3),
             "overlap_ms_per_step":
                 None if overlap_ms is None else round(overlap_ms, 3),
             "overlap_ms_saved":
@@ -210,6 +225,26 @@ def resize_timing(model, data, *, batch_per_worker: int) -> dict:
             "rejit_first_step_ms": round(rejit_ms, 3)}
 
 
+def autotune_entry(model, *, smoke: bool, steps: int, warmup: int,
+                   n_workers: int, batch_per_worker: int, seq: int) -> dict:
+    """The ``autotune`` entry of the artifact: every candidate bucket
+    layout probed on THIS bench's model and step budget, tuned = the
+    measured argmin (the default config is always probed, so
+    ``tuned_ms <= default_ms`` cannot fail on a fair machine)."""
+    from repro.analysis.autotune import (TRAIN_DEFAULT, probe_train,
+                                         train_space)
+    probed = probe_train(train_space(smoke), model=model,
+                         n_workers=n_workers,
+                         batch_per_worker=batch_per_worker, seq=seq,
+                         steps=steps, warmup=warmup)
+    best = min(probed, key=lambda r: r["ms_per_step"])
+    default = next(r for r in probed if r["config"] == TRAIN_DEFAULT)
+    return {"default": dict(TRAIN_DEFAULT), "tuned": best["config"],
+            "default_ms": default["ms_per_step"],
+            "tuned_ms": best["ms_per_step"],
+            "candidates": probed}
+
+
 def main(args=None):
     from repro.configs import get_config, reduced
     from repro.data import SyntheticLMDataset
@@ -249,12 +284,37 @@ def main(args=None):
                      f"reduce_ops={row['hlo_reduce_ops']};"
                      f"convert_ops={row['hlo_convert_ops']};"
                      f"wire_bytes={row.get('wire_bytes_per_step', '-')}")
+        # quantized wire: the error-feedback residual absorbs the int8
+        # rounding (repro.core.quant), so the same bucketed step runs
+        # with a ~4x (dense) / ~400x (topk) smaller payload — one dense
+        # and one compressed int8 row per algo
+        if algo == "dc_s3gd":
+            for reducer in ("mean_allreduce", "topk"):
+                row = time_config(algo, reducer, False, BUCKETS, model,
+                                  data, n_workers=W,
+                                  batch_per_worker=bpw, steps=steps,
+                                  warmup=warmup, comm_dtype="int8")
+                rows.append(row)
+                emit(f"step_time_{algo}_{reducer}_int8_b{BUCKETS}",
+                     row["ms_per_step"] * 1e3,
+                     f"wire_bytes={row.get('wire_bytes_per_step', '-')};"
+                     f"compression={row.get('wire_compression', '-')}")
 
     # the elastic-transition cost rides along with the step-time grid:
     # one row, not a grid — the reshard is reducer-independent
     resize = resize_timing(model, data, batch_per_worker=bpw)
     emit("step_time_resize_w8_w7", resize["resize_ms"] * 1e3,
          f"rejit_first_step_ms={resize['rejit_first_step_ms']}")
+
+    # roofline-driven autotune (repro.analysis.autotune): probe the
+    # candidate bucket layouts INCLUDING the default, adopt the argmin —
+    # tuned <= default by construction, and CI gates exactly that
+    autotuned = autotune_entry(model, smoke=smoke, steps=steps,
+                               warmup=warmup, n_workers=W,
+                               batch_per_worker=bpw, seq=seq)
+    emit("step_time_autotune_tuned", autotuned["tuned_ms"] * 1e3,
+         f"default_ms={autotuned['default_ms']};"
+         f"tuned={autotuned['tuned']}")
 
     if getattr(args, "json", False):
         out = {
@@ -265,6 +325,7 @@ def main(args=None):
             "jax": jax.__version__,
             "smoke": smoke,
             "resize": resize,
+            "autotune": autotuned,
             "rows": rows,
         }
         full_grid = tuple(algos) == FULL_ALGOS

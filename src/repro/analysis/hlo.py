@@ -98,6 +98,7 @@ class Op:
     result_dims: List[int]
     operands: List[str]
     line: str
+    result_dtype: str = ""
 
 
 @dataclass
@@ -138,12 +139,12 @@ def parse_hlo(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
             om = _OP_RE.match(rhs)
             if om:
                 type_text, kind, rest = om.group(1), om.group(2), om.group(3)
-                rbytes, rdims, _ = _shape_info(type_text)
+                rbytes, rdims, rdt = _shape_info(type_text)
                 operands = _OPERAND_RE.findall(rest.split("),")[0]) \
                     if rest else []
                 cur.symbols[name] = (rbytes, rdims)
                 cur.ops.append(Op(name, kind, rbytes, rdims, operands,
-                                  stripped))
+                                  stripped, rdt))
         if depth <= 0:
             cur.text = "\n".join(buf)
             comps[cur.name] = cur
@@ -270,7 +271,18 @@ class HLOStats:
         return sorted(self.traffic_contributors, key=lambda t: -t[1])[:n]
 
 
-def analyze_hlo(hlo: str) -> HLOStats:
+def analyze_hlo(hlo: str, wire_dtype: Optional[str] = None) -> HLOStats:
+    """``wire_dtype`` (e.g. ``"int8"``/``"fp8"``): count FLOAT collective
+    payloads at that dtype's wire itemsize (+ one f32 scale per
+    collective) instead of the HLO result dtype — the lowered
+    single-program simulation carries the dequantized f32 payload, but
+    the bytes a multi-worker wire moves are the quantized ones, and the
+    autotuner's comm term must price those (element count x 1, not x 4).
+    """
+    wire_it = None
+    if wire_dtype is not None and str(wire_dtype) != "float32":
+        from repro.core import quant as _Q
+        wire_it = _Q.wire_itemsize(wire_dtype)
     comps, entry = parse_hlo(hlo)
     stats = HLOStats(coll_breakdown={k: 0.0 for k in _COLL_KINDS},
                      coll_counts={k: 0 for k in _COLL_KINDS})
@@ -300,6 +312,16 @@ def analyze_hlo(hlo: str) -> HLOStats:
                 # format for these is bf16 — count payload at bf16.
                 if "promoted" in op.line and " f32[" in " " + op.line:
                     rb //= 2
+                # wire-dtype override: a float payload crosses the wire
+                # at wire_it bytes/element + one f32 scale per collective
+                # (the lowered simulation carries dequantized f32; the
+                # real wire moves the quantized bytes)
+                if wire_it is not None and \
+                        op.result_dtype in ("f32", "bf16", "f16"):
+                    elems = 1
+                    for d in op.result_dims:
+                        elems *= d
+                    rb = min(rb, elems * wire_it + 4)
                 tr = mult * _coll_traffic(base, rb, n)
                 stats.coll_breakdown[base] += tr
                 stats.coll_counts[base] += 1

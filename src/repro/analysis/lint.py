@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from repro.analysis.hlo import count_ops
 from repro.analysis.report import (Finding, findings_report, load_baseline,
                                    new_findings, render_findings)
+from repro.core import quant as Q
 from repro.core import registry
 from repro.core.types import DCS3GDConfig
 from repro.launch.engine import Engine
@@ -61,11 +62,14 @@ class GridPoint:
     reducer: str
     buckets: int
     overlap: bool
+    wire: str = "bfloat16"   # comm_dtype of the audited program
 
     @property
     def name(self) -> str:
-        return (f"{self.algo}/{self.reducer}/b{self.buckets}/"
+        base = (f"{self.algo}/{self.reducer}/b{self.buckets}/"
                 f"{'ov' if self.overlap else 'in'}")
+        # baseline names stay stable: only non-default wires get a suffix
+        return base if self.wire == "bfloat16" else f"{base}/{self.wire}"
 
 
 def iter_grid() -> Iterator[GridPoint]:
@@ -85,6 +89,9 @@ def iter_grid() -> Iterator[GridPoint]:
                                     or not buckets):
                         continue
                     yield GridPoint(algo, reducer, buckets, overlap)
+    # one quantized-wire point so the wire-accounting gate covers the
+    # int8 byte model (quantize cast census + scale bytes)
+    yield GridPoint("dc_s3gd", "topk", 4, False, wire="int8")
 
 
 # ---------------------------------------------------------------------------
@@ -135,8 +142,13 @@ def _transformer_setup():
 
 # MLIR float element types <-> numpy names and wire byte widths
 _MLIR_FLOATS = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2}
+# quantized wire storage types (1 B payload each) — the census widths
+# the wire-accounting pass uses cover floats AND quantized dsts
+_MLIR_QUANT = {"i8": 1, "f8E4M3FN": 1, "f8E5M2": 1}
+_MLIR_WIRE = {**_MLIR_FLOATS, **_MLIR_QUANT}
 _NP_TO_MLIR = {"float64": "f64", "float32": "f32", "float16": "f16",
-               "bfloat16": "bf16"}
+               "bfloat16": "bf16", "int8": "i8",
+               "float8_e4m3fn": "f8E4M3FN", "float8_e5m2": "f8E5M2"}
 
 
 class Program:
@@ -151,7 +163,7 @@ class Program:
         self.point = point
         self.name = point.name
         self.model_kind = model
-        cfg = DCS3GDConfig(comm_dtype="bfloat16", learning_rate=0.05,
+        cfg = DCS3GDConfig(comm_dtype=point.wire, learning_rate=0.05,
                            momentum=0.9, lambda0=0.2, warmup_steps=1,
                            total_steps=4)
         self.cfg = cfg
@@ -167,7 +179,8 @@ class Program:
         self.engine = Engine(self.model, self.alg)
         self.state = self.engine.init_state(jax.random.PRNGKey(0))
         self.n_workers = N_WORKERS
-        self.comm_mlir = _NP_TO_MLIR[str(jnp.dtype(cfg.comm_dtype))]
+        self.comm_mlir = _NP_TO_MLIR[
+            str(jnp.dtype(Q.canonical(cfg.comm_dtype)))]
         self._lowered = None
         self._stablehlo: Optional[str] = None
         self._debug: Optional[str] = None
@@ -226,7 +239,8 @@ class Program:
     def inline_sibling(self) -> "Program":
         assert self.point.overlap, self.name
         return Program(GridPoint(self.point.algo, self.point.reducer,
-                                 self.point.buckets, False),
+                                 self.point.buckets, False,
+                                 wire=self.point.wire),
                        model=self.model_kind)
 
 
@@ -423,6 +437,19 @@ class DtypeDriftPass:
         # census: no unexpected float down-casts; comm casts on the wire
         allowed = {"f32", prog.comm_mlir}
         for c in scoped_converts(prog.stablehlo_debug):
+            if c.src in _MLIR_FLOATS and c.dst in _MLIR_QUANT:
+                # a quantize cast: only legal as the declared comm_dtype
+                # inside the wire scope (the reducers' quantize seam)
+                if c.dst == prog.comm_mlir and not _in_wire_scope(c.scope):
+                    out.append(Finding(
+                        pass_name=self.name, severity="error",
+                        program=prog.name, op=f"convert->{c.dst}",
+                        location=c.scope,
+                        message=f"quantize cast {c.src}->{c.dst} "
+                                f"({c.elements} elements) outside the "
+                                f"'wire' scope — a wire quantization "
+                                f"leaked into compute"))
+                continue
             if c.src not in _MLIR_FLOATS or c.dst not in _MLIR_FLOATS:
                 continue
             if _MLIR_FLOATS[c.dst] >= _MLIR_FLOATS[c.src]:
@@ -497,16 +524,16 @@ class WireAccountingPass:
         red = getattr(prog.alg, "reducer", None)
         if red is None or not hasattr(red, "wire_model"):
             return []
-        it = jnp.dtype(prog.cfg.comm_dtype).itemsize
+        it = Q.wire_itemsize(prog.cfg.comm_dtype)
         if it == 4:
             return []
         sizes = prog.wire_sizes
         model = red.wire_model(sizes, prog.n_workers)
         observed = sum(
-            c.elements * _MLIR_FLOATS[c.dst]
+            c.elements * _MLIR_WIRE[c.dst]
             for c in scoped_converts(prog.stablehlo_debug)
             if c.dst == prog.comm_mlir and c.src in _MLIR_FLOATS
-            and _MLIR_FLOATS[c.dst] < _MLIR_FLOATS[c.src]
+            and _MLIR_WIRE[c.dst] < _MLIR_FLOATS[c.src]
             and _in_wire_scope(c.scope))
         out = []
         if observed != int(model["cast_bytes"]):

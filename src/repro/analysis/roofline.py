@@ -51,9 +51,14 @@ def model_flops_per_step(cfg: ModelConfig, shape: InputShape,
 
 
 def analyze(compiled, cfg: ModelConfig, shape: InputShape, n_chips: int,
-            hlo_text: Optional[str] = None) -> Roofline:
+            hlo_text: Optional[str] = None,
+            wire_dtype: Optional[str] = None) -> Roofline:
+    """``wire_dtype`` prices collective payloads at the reducer's wire
+    dtype (int8/fp8/bf16) instead of the HLO result dtype — without it
+    the collective term of every quantized-wire point is 4x too big and
+    the autotuner would never pick one."""
     hlo = hlo_text if hlo_text is not None else compiled.as_text()
-    st = analyze_hlo(hlo)
+    st = analyze_hlo(hlo, wire_dtype=wire_dtype)
     # NOTE: the backend's cost_analysis() counts while (scan) bodies once,
     # so FLOPs/bytes come from our own HLO traversal with trip counts;
     # dot flops dominate, fusion outputs stand in for elementwise flops.

@@ -44,7 +44,7 @@ def rebuild_algorithm(alg, n_new: int):
     for attr in ("local_optimizer", "reducer", "compensator", "staleness"):
         if hasattr(alg, attr):
             kw[attr] = getattr(alg, attr)
-    for attr in ("use_kernels", "buckets", "overlap"):
+    for attr in ("use_kernels", "buckets", "overlap", "plan_block"):
         if hasattr(alg, attr):
             kw[attr] = getattr(alg, attr)
     from repro.core import registry

@@ -50,11 +50,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import quant as Q
 from repro.core import registry
 
 PyTree = Any
 
 _INDEX_BYTES = 4  # int32 coordinates on the wire (topk only)
+
+
+def _quantized_roundtrip(c: jnp.ndarray, comm_dtype) -> jnp.ndarray:
+    """What the receivers reconstruct from a quantized wire crossing:
+    per-worker-row int8/fp8 values + one f32 scale, dequantized.  The
+    caller's residual ``a - roundtrip`` then absorbs the quantization
+    error exactly like it absorbs the sparsification error."""
+    return Q.dequantize(*Q.quantize(c, comm_dtype))
 
 
 def _require_buckets(name: str, plan) -> None:
@@ -210,19 +219,28 @@ class _ErrorFeedbackMean:
     def __call__(self, wire, rstate: PyTree) -> Tuple[List[jnp.ndarray],
                                                       PyTree]:
         buckets = _as_buckets(wire)
-        dt = jnp.dtype(self.comm_dtype)
+        quantized = Q.is_quantized(self.comm_dtype)
+        # the fused Pallas body implements the plain-cast wire only; a
+        # quantized comm dtype takes the XLA path below
+        dt = None if quantized else jnp.dtype(self.comm_dtype)
         out, new_res = [], []
         for b, d in enumerate(buckets):
             # error feedback: what compression dropped last step re-enters
             # the payload before this step's selection
             a = d.astype(jnp.float32) + rstate["residual"][b]
-            fused = self._fused_bucket(b, a, dt) if self.use_kernels \
-                else None
+            fused = self._fused_bucket(b, a, dt) \
+                if (self.use_kernels and not quantized) else None
             if fused is not None:
                 o, r = fused
             else:
                 c = self._compress(b, a, rstate)
-                o, r = _mean_over_workers(c, dt), a - c
+                if quantized:
+                    # the sparse payload crosses the wire quantized; the
+                    # residual absorbs selection AND quantization error
+                    cq = _quantized_roundtrip(c, self.comm_dtype)
+                    o, r = jnp.mean(cq, axis=0, keepdims=True), a - cq
+                else:
+                    o, r = _mean_over_workers(c, dt), a - c
             out.append(o)
             new_res.append(r)
         new_state = dict(rstate)
@@ -289,9 +307,15 @@ class _ErrorFeedbackMean:
         non-zero — on a real wire the payload is values+indices, which
         is what ``wire_bytes`` hand-counts.  So ``cast_bytes`` models
         the dense lowering and ``accounted_bytes`` the sparse payload;
-        the pass checks both, and additionally that accounted <= dense."""
-        it = jnp.dtype(self.comm_dtype).itemsize
-        return {"cast_bytes": (n_workers + 1) * sum(sizes) * it,
+        the pass checks both, and additionally that accounted <= dense.
+
+        A QUANTIZED wire drops the mean-result cast (the mean runs on
+        the dequantized f32 payload), so only the (W, n) quantize cast
+        is observable."""
+        it = Q.wire_itemsize(self.comm_dtype)
+        mult = n_workers if Q.is_quantized(self.comm_dtype) \
+            else n_workers + 1
+        return {"cast_bytes": mult * sum(sizes) * it,
                 "accounted_bytes":
                     self._accounted_bytes(sizes, n_workers)}
 
@@ -334,15 +358,18 @@ class TopKReduce(_ErrorFeedbackMean):
         return {"comm_dtype": self.comm_dtype, "density": self.density}
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
-        it = jnp.dtype(self.comm_dtype).itemsize
-        return sum(_k_of(n, self.density) * (it + _INDEX_BYTES)
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
+        return sum(_k_of(n, self.density) * (it + _INDEX_BYTES) + sb
                    for n in sizes)
 
     def _accounted_bytes(self, sizes: Sequence[int],
                          n_workers: int) -> int:
         # k values in comm_dtype + k int32 coordinates per bucket
-        it = jnp.dtype(self.comm_dtype).itemsize
-        return sum(_k_of(n, self.density) * (it + _INDEX_BYTES)
+        # (+ one f32 scale per bucket row when the wire is quantized)
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
+        return sum(_k_of(n, self.density) * (it + _INDEX_BYTES) + sb
                    for n in sizes)
 
     def _compress(self, b: int, a: jnp.ndarray, rstate: PyTree
@@ -398,7 +425,8 @@ class TopKExactReduce(TopKReduce):
         return super().resize(rstate, n_new)
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
-        it = jnp.dtype(self.comm_dtype).itemsize
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
         w = getattr(self, "_n_workers", None)
         if w is None:
             # the union payload scales with the worker count captured at
@@ -409,18 +437,19 @@ class TopKExactReduce(TopKReduce):
         total = 0
         for n in sizes:
             k = _k_of(n, self.density)
-            total += k * _INDEX_BYTES + min(w * k, n) * it
+            total += k * _INDEX_BYTES + min(w * k, n) * it + sb
         return total
 
     def _accounted_bytes(self, sizes: Sequence[int],
                          n_workers: int) -> int:
         # k coordinates for the support all-gather + up to min(W*k, n)
         # union values per bucket (worker count from the live membership)
-        it = jnp.dtype(self.comm_dtype).itemsize
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
         total = 0
         for n in sizes:
             k = _k_of(n, self.density)
-            total += k * _INDEX_BYTES + min(n_workers * k, n) * it
+            total += k * _INDEX_BYTES + min(n_workers * k, n) * it + sb
         return total
 
     def _compress(self, b: int, a: jnp.ndarray, rstate: PyTree
@@ -458,14 +487,16 @@ class RandKReduce(_ErrorFeedbackMean):
                 "seed": self.seed}
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
-        it = jnp.dtype(self.comm_dtype).itemsize
-        return sum(_k_of(n, self.density) * it for n in sizes)
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
+        return sum(_k_of(n, self.density) * it + sb for n in sizes)
 
     def _accounted_bytes(self, sizes: Sequence[int],
                          n_workers: int) -> int:
         # shared-seed support: k values per bucket, no index payload
-        it = jnp.dtype(self.comm_dtype).itemsize
-        return sum(_k_of(n, self.density) * it for n in sizes)
+        it = Q.wire_itemsize(self.comm_dtype)
+        sb = Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
+        return sum(_k_of(n, self.density) * it + sb for n in sizes)
 
     def init(self, n_workers: int, plan) -> PyTree:
         state = super().init(n_workers, plan)
@@ -526,11 +557,14 @@ class PowerSGDReduce(_ErrorFeedbackMean):
         return rows, cols, max(1, min(self.rank, rows, cols))
 
     def wire_bytes(self, sizes: Sequence[int]) -> int:
-        it = jnp.dtype(self.comm_dtype).itemsize
+        it = Q.wire_itemsize(self.comm_dtype)
+        # a quantized wire carries one f32 scale per factor payload
+        # (two crossings per bucket: the P and Q rounds)
+        sb = 2 * Q.SCALE_BYTES if Q.is_quantized(self.comm_dtype) else 0
         total = 0
         for n in sizes:
             rows, cols, r = self._dims(n)
-            total += (rows + cols) * r * it
+            total += (rows + cols) * r * it + sb
         return total
 
     def _accounted_bytes(self, sizes: Sequence[int],
@@ -543,13 +577,16 @@ class PowerSGDReduce(_ErrorFeedbackMean):
         power-iteration rounds go through `_mean_over_workers`, so per
         bucket the observable down-casts are the (W, rows, r) and
         (W, cols, r) factor payloads plus the two (1, ·, r) mean-result
-        casts — (W+1)·(rows+cols)·r elements total."""
-        it = jnp.dtype(self.comm_dtype).itemsize
+        casts — (W+1)·(rows+cols)·r elements total.  Quantized: only
+        the two (W, ·, r) quantize casts (no result down-cast)."""
+        it = Q.wire_itemsize(self.comm_dtype)
+        mult = n_workers if Q.is_quantized(self.comm_dtype) \
+            else n_workers + 1
         factor = 0
         for n in sizes:
             rows, cols, r = self._dims(int(n))
             factor += (rows + cols) * r
-        return {"cast_bytes": (n_workers + 1) * factor * it,
+        return {"cast_bytes": mult * factor * it,
                 "accounted_bytes": self._accounted_bytes(sizes, n_workers)}
 
     def init(self, n_workers: int, plan) -> PyTree:
@@ -573,7 +610,18 @@ class PowerSGDReduce(_ErrorFeedbackMean):
     def __call__(self, wire, rstate: PyTree) -> Tuple[List[jnp.ndarray],
                                                       PyTree]:
         buckets = _as_buckets(wire)
-        dt = jnp.dtype(self.comm_dtype)
+        quantized = Q.is_quantized(self.comm_dtype)
+        dt = None if quantized else jnp.dtype(self.comm_dtype)
+
+        def factor_mean(f):
+            # one wire crossing of a (W, ·, r) factor payload: quantized
+            # dtypes travel as values + per-worker scale, dequantized
+            # before the f32 mean; float dtypes keep the plain-cast path
+            if quantized:
+                return jnp.mean(_quantized_roundtrip(f, self.comm_dtype),
+                                axis=0)
+            return _mean_over_workers(f, dt)[0]
+
         out, new_res, new_q = [], [], []
         for b, d in enumerate(buckets):
             a = d.astype(jnp.float32) + rstate["residual"][b]
@@ -582,11 +630,10 @@ class PowerSGDReduce(_ErrorFeedbackMean):
             m = a.reshape(a.shape[0], rows, cols)
             # round 1: project onto the warm-started subspace, mean the
             # (rows, r) factors over workers (first wire crossing)
-            p = _mean_over_workers(m @ rstate["q"][b], dt)[0]
+            p = factor_mean(m @ rstate["q"][b])
             p = jnp.linalg.qr(p)[0]
             # round 2: mean the (cols, r) co-factors (second crossing)
-            q = _mean_over_workers(
-                jnp.einsum("wrc,rk->wck", m, p), dt)[0]
+            q = factor_mean(jnp.einsum("wrc,rk->wck", m, p))
             approx = (p @ q.T).reshape(1, n)
             out.append(approx)
             new_res.append(a - approx)
@@ -637,20 +684,33 @@ class DenseWindowReduce:
         inner reducer's compressed accounting.  (``wire_bytes`` stays
         delegated on purpose: bench columns report the steady-state
         compressed wire, not the transient window.)"""
-        it = jnp.dtype(self.inner.comm_dtype).itemsize
+        it = Q.wire_itemsize(self.inner.comm_dtype)
         n = sum(int(s) for s in sizes)
+        if Q.is_quantized(self.inner.comm_dtype):
+            return {"cast_bytes": n_workers * n * it,
+                    "accounted_bytes":
+                        n * it + Q.SCALE_BYTES * len(list(sizes))}
         return {"cast_bytes": (n_workers + 1) * n * it,
                 "accounted_bytes": n * it}
 
     def __call__(self, wire, rstate: PyTree) -> Tuple[List[jnp.ndarray],
                                                       PyTree]:
         buckets = _as_buckets(wire)
-        dt = jnp.dtype(self.inner.comm_dtype)
+        quantized = Q.is_quantized(self.inner.comm_dtype)
+        dt = None if quantized else jnp.dtype(self.inner.comm_dtype)
         out, new_res = [], []
         for b, d in enumerate(buckets):
             a = d.astype(jnp.float32) + rstate["residual"][b]
-            out.append(_mean_over_workers(a, dt))
-            new_res.append(jnp.zeros_like(a))
+            if quantized:
+                # dense window on a quantized wire: the full payload
+                # crosses quantized, so the residual keeps the (small)
+                # quantization error instead of re-contracting to zero
+                cq = _quantized_roundtrip(a, self.inner.comm_dtype)
+                out.append(jnp.mean(cq, axis=0, keepdims=True))
+                new_res.append(a - cq)
+            else:
+                out.append(_mean_over_workers(a, dt))
+                new_res.append(jnp.zeros_like(a))
         new_state = dict(rstate)
         new_state["residual"] = new_res
         return out, new_state

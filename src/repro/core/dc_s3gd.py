@@ -96,7 +96,8 @@ class DCS3GD:
                  local_optimizer=None, reducer=None, compensator=None,
                  staleness=None, use_kernels: bool = False,
                  buckets: Optional[int] = None,
-                 overlap: Optional[bool] = None):
+                 overlap: Optional[bool] = None,
+                 plan_block: Optional[int] = None):
         self.cfg = cfg
         self.n_workers = n_workers
         self.local_optimizer = (
@@ -117,6 +118,10 @@ class DCS3GD:
         # wire state + fused tail into that many contiguous buckets; 0 is
         # the legacy per-leaf path
         self.buckets = int(cfg.buckets if buckets is None else buckets)
+        # bucket padding granularity (multiple of the fused Pallas
+        # BLOCK); None = the kernel default — the autotuner's train-side
+        # block knob (repro.analysis.autotune)
+        self.plan_block = None if plan_block is None else int(plan_block)
         # double-buffered bucket pipeline (repro.parallel.pipeline): issue
         # the next reduce at the end of each step, consume the landed one
         # at the top — bitwise the inline schedule, structurally overlapped
@@ -143,7 +148,9 @@ class DCS3GD:
         leaves work — the dry-run never allocates."""
         from repro.parallel import buckets as B
         return B.cached_plan(self._plan_cache, worker_params, self.buckets,
-                             strip_leading_axis=True)
+                             block=self.plan_block, strip_leading_axis=True,
+                             wire_dtype=getattr(self.reducer, "comm_dtype",
+                                                None))
 
     def init(self, params: PyTree) -> TrainState:
         cfg = self.cfg

@@ -1,0 +1,86 @@
+"""Symmetric scaled quantization — the shared seam behind the two
+byte-multipliers (quantized wire, quantized KV pages).
+
+Both hot paths move the same thing: a float payload that crosses a
+byte-bound boundary (the reducer's simulated wire; a `PagePool`'s HBM
+pages) and is consumed back in f32 compute.  Quantization here is
+always *symmetric per-row*: each row (a worker's bucket on the wire, a
+token slot in a KV page) carries its values in int8/fp8 plus ONE f32
+scale, chosen so the row's absolute maximum maps to the format's clip
+point — dequantization is a single multiply, zero stays exactly zero,
+and the worst-case error of a row element is bounded by
+
+    |x - dq(q(x))| <= amax(row) / (2 * QMAX)      (int8, round-to-even)
+
+The consumers own the error story: the reducers' error-feedback
+residual absorbs ``a - dequant(quant(c))`` exactly like it absorbs
+sparsification (`repro.core.compress`), and the paged-attention kernels
+dequantize inside the page DMA so online-softmax math never leaves f32
+(`repro.kernels.paged_attention`).
+
+Dtype names accepted everywhere: the canonical numpy names
+(``"int8"``, ``"float8_e4m3fn"``) plus the short aliases ``"fp8"``
+(-> e4m3fn) and ``"i8"``.  Non-quantized float names (``"float32"``,
+``"bfloat16"``) pass `is_quantized` = False and are handled by the
+caller's plain-cast path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# canonical name -> (storage dtype, symmetric clip point).  e4m3fn's max
+# finite value is 448; int8 clips at 127 so the symmetric range is exact.
+QUANT_DTYPES = {
+    "int8": (jnp.int8, 127.0),
+    "float8_e4m3fn": (jnp.float8_e4m3fn, 448.0),
+}
+_ALIASES = {"fp8": "float8_e4m3fn", "i8": "int8"}
+
+SCALE_BYTES = 4  # one f32 scale per quantized row/token on the wire
+
+
+def canonical(name) -> str:
+    s = str(name)
+    return _ALIASES.get(s, s)
+
+
+def is_quantized(name) -> bool:
+    return canonical(name) in QUANT_DTYPES
+
+
+def qinfo(name) -> Tuple:
+    """(storage jnp dtype, clip point) for a quantized dtype name."""
+    return QUANT_DTYPES[canonical(name)]
+
+
+def wire_itemsize(name) -> int:
+    """Payload bytes per element — resolves aliases np.dtype rejects."""
+    if is_quantized(name):
+        return 1
+    return jnp.dtype(name).itemsize
+
+
+def quantize(x: jnp.ndarray, name, *, axes=None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``(q, scale)`` with per-row scales (keepdims).
+
+    ``axes`` are the reduction axes of the amax (default: everything but
+    axis 0 — one scale per leading-axis row).  ``scale`` is f32 and
+    floored at a tiny epsilon so all-zero rows stay exactly zero instead
+    of dividing by zero."""
+    qdt, qmax = qinfo(name)
+    x = x.astype(jnp.float32)
+    if axes is None:
+        axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / jnp.float32(qmax)
+    y = jnp.clip(x / scale, -qmax, qmax)
+    if jnp.issubdtype(qdt, jnp.integer):
+        y = jnp.round(y)
+    return y.astype(qdt), scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -24,13 +24,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as Q
 from repro.core import registry
 
 PyTree = Any
 
 
 def _wire_itemsize(comm_dtype) -> int:
-    return jnp.dtype(comm_dtype).itemsize
+    return Q.wire_itemsize(comm_dtype)
 
 
 @registry.register(registry.REDUCER, "mean_allreduce")
@@ -60,8 +61,12 @@ class MeanAllReduce:
     def wire_bytes(self, sizes) -> int:
         """Per-worker wire payload per step for leaves/buckets of
         ``sizes`` elements (topology factors — ring hops, tree fan-in —
-        excluded; they multiply dense and compressed payloads alike)."""
-        return sum(sizes) * _wire_itemsize(self.comm_dtype)
+        excluded; they multiply dense and compressed payloads alike).
+        Quantized dtypes add one f32 scale per leaf/bucket row."""
+        it = _wire_itemsize(self.comm_dtype)
+        if Q.is_quantized(self.comm_dtype):
+            return sum(sizes) * it + Q.SCALE_BYTES * len(list(sizes))
+        return sum(sizes) * it
 
     def wire_model(self, sizes, n_workers: int) -> dict:
         """HLO-observable wire-cast census vs the ``wire_bytes`` hand
@@ -71,16 +76,31 @@ class MeanAllReduce:
         the lowered reducer body performs per invocation (the simulated
         wire crossings the analyzer can see under the ``wire`` named
         scope): the (W, n) payload cast plus ``jnp.mean``'s (1, n)
-        result cast back to the input dtype.  ``accounted_bytes`` is the
-        independently-written per-worker payload formula the pass cross
-        checks ``wire_bytes`` against — edit one without the other and
-        the lint gate trips."""
+        result cast back to the input dtype.  For a QUANTIZED wire only
+        the (W, n) quantize cast is observable — the mean runs on the
+        dequantized f32 payload, so there is no result down-cast.
+        ``accounted_bytes`` is the independently-written per-worker
+        payload formula the pass cross checks ``wire_bytes`` against —
+        edit one without the other and the lint gate trips."""
         it = _wire_itemsize(self.comm_dtype)
         n = sum(sizes)
+        if Q.is_quantized(self.comm_dtype):
+            return {"cast_bytes": n_workers * n * it,
+                    "accounted_bytes":
+                        n * it + Q.SCALE_BYTES * len(list(sizes))}
         return {"cast_bytes": (n_workers + 1) * n * it,
                 "accounted_bytes": n * it}
 
     def __call__(self, tree: PyTree) -> PyTree:
+        if Q.is_quantized(self.comm_dtype):
+            # quantized wire: each worker row crosses as int8/fp8 values
+            # + one f32 scale; the mean runs on the dequantized payload
+            # so the accumulation never leaves f32
+            def red(d):
+                qv, s = Q.quantize(d, self.comm_dtype)
+                return jnp.mean(Q.dequantize(qv, s), axis=0,
+                                keepdims=True)
+            return jax.tree.map(red, tree)
         dt = jnp.dtype(self.comm_dtype)
         return jax.tree.map(
             lambda d: jnp.mean(d.astype(dt), axis=0, keepdims=True)
@@ -118,9 +138,12 @@ class GossipReduce:
     def wire_bytes(self, sizes) -> int:
         # the worker's row crosses the wire once per ring neighbor (2k
         # collective-permutes; small rings dedup to fewer, but W is not
-        # known here — count the full-ring upper bound)
-        return 2 * self.neighbors * sum(sizes) \
-            * _wire_itemsize(self.comm_dtype)
+        # known here — count the full-ring upper bound).  Quantized rows
+        # carry their f32 scale on every hop.
+        per_hop = sum(sizes) * _wire_itemsize(self.comm_dtype)
+        if Q.is_quantized(self.comm_dtype):
+            per_hop += Q.SCALE_BYTES * len(list(sizes))
+        return 2 * self.neighbors * per_hop
 
     def wire_model(self, sizes, n_workers: int) -> dict:
         """See `MeanAllReduce.wire_model`.  Gossip down-casts the (W, n)
@@ -129,12 +152,16 @@ class GossipReduce:
         once per ring hop (2k, the full-ring upper bound)."""
         it = _wire_itemsize(self.comm_dtype)
         n = sum(sizes)
+        per_hop = n * it
+        if Q.is_quantized(self.comm_dtype):
+            per_hop += Q.SCALE_BYTES * len(list(sizes))
         return {"cast_bytes": n_workers * n * it,
-                "accounted_bytes": 2 * self.neighbors * n * it}
+                "accounted_bytes": 2 * self.neighbors * per_hop}
 
     def __call__(self, tree: PyTree) -> PyTree:
-        dt = jnp.dtype(self.comm_dtype)
         k = self.neighbors
+        quantized = Q.is_quantized(self.comm_dtype)
+        dt = None if quantized else jnp.dtype(self.comm_dtype)
 
         def red(d):
             W = d.shape[0]
@@ -146,12 +173,22 @@ class GossipReduce:
             offs = sorted({s % W for s in range(-k, k + 1)})
             # only neighbor terms cross the wire — the self term stays f32
             # (no reason to quantize a worker's own contribution)
-            wire = d.astype(dt)
             acc = d.astype(jnp.float32)
-            for off in offs:
-                if off:
-                    acc = acc + jnp.roll(wire, off, axis=0) \
-                        .astype(jnp.float32)
+            if quantized:
+                # quantize once; the rolls move values AND scales so each
+                # hop dequantizes the sender's row with the sender's scale
+                qv, sc = Q.quantize(d, self.comm_dtype)
+                for off in offs:
+                    if off:
+                        acc = acc + Q.dequantize(
+                            jnp.roll(qv, off, axis=0),
+                            jnp.roll(sc, off, axis=0))
+            else:
+                wire = d.astype(dt)
+                for off in offs:
+                    if off:
+                        acc = acc + jnp.roll(wire, off, axis=0) \
+                            .astype(jnp.float32)
             return acc / jnp.float32(len(offs))
 
         return jax.tree.map(red, tree)
@@ -195,9 +232,11 @@ class HierarchicalReduce:
         # intra-group: the worker's row once over the fast wire; inter:
         # the group mean once per ring neighbor over the slow wire
         # (per-worker amortized share is 1/(W/G) of it — count the full
-        # payload, conservative)
-        return (1 + 2 * self.neighbors) * sum(sizes) \
-            * _wire_itemsize(self.comm_dtype)
+        # payload, conservative).  Quantized hops carry the f32 scale.
+        per_hop = sum(sizes) * _wire_itemsize(self.comm_dtype)
+        if Q.is_quantized(self.comm_dtype):
+            per_hop += Q.SCALE_BYTES * len(list(sizes))
+        return (1 + 2 * self.neighbors) * per_hop
 
     def wire_model(self, sizes, n_workers: int) -> dict:
         """See `MeanAllReduce.wire_model`.  Only the GROUP MEANS cross
@@ -206,13 +245,17 @@ class HierarchicalReduce:
         the hand accounting charges intra (1 hop) + inter (2k hops)."""
         it = _wire_itemsize(self.comm_dtype)
         n = sum(sizes)
+        per_hop = n * it
+        if Q.is_quantized(self.comm_dtype):
+            per_hop += Q.SCALE_BYTES * len(list(sizes))
         return {"cast_bytes": self.groups * n * it,
                 "accounted_bytes":
-                    (1 + 2 * self.neighbors) * n * it}
+                    (1 + 2 * self.neighbors) * per_hop}
 
     def __call__(self, tree: PyTree) -> PyTree:
-        dt = jnp.dtype(self.comm_dtype)
         G, k = self.groups, self.neighbors
+        quantized = Q.is_quantized(self.comm_dtype)
+        dt = None if quantized else jnp.dtype(self.comm_dtype)
 
         def red(d):
             W = d.shape[0]
@@ -225,12 +268,21 @@ class HierarchicalReduce:
             # offsets only — with few groups (G=2: left == right neighbor)
             # wrap-around must not double-count a pod.
             offs = sorted({s % G for s in range(-k, k + 1)})
-            wire = intra.astype(dt)
             acc = intra
-            for off in offs:
-                if off:
-                    acc = acc + jnp.roll(wire, off, axis=0) \
-                        .astype(jnp.float32)
+            if quantized:
+                # one scale per group mean; rolls move values + scales
+                qv, sc = Q.quantize(intra, self.comm_dtype)
+                for off in offs:
+                    if off:
+                        acc = acc + Q.dequantize(
+                            jnp.roll(qv, off, axis=0),
+                            jnp.roll(sc, off, axis=0))
+            else:
+                wire = intra.astype(dt)
+                for off in offs:
+                    if off:
+                        acc = acc + jnp.roll(wire, off, axis=0) \
+                            .astype(jnp.float32)
             acc = acc / jnp.float32(len(offs))
             return jnp.broadcast_to(acc, x.shape).reshape(d.shape)
 

@@ -43,7 +43,8 @@ class SSGD:
     def __init__(self, cfg: DCS3GDConfig, *, n_workers: int = 1,
                  local_optimizer=None, reducer=None,
                  buckets: Optional[int] = None, use_kernels: bool = False,
-                 overlap: bool = False, **_ignored):
+                 overlap: bool = False,
+                 plan_block: Optional[int] = None, **_ignored):
         if overlap:
             raise ValueError(
                 "overlap=True is not available for ssgd: the gradient "
@@ -65,11 +66,16 @@ class SSGD:
         # wire): >0 packs grads into contiguous buckets so the reducer
         # casts/means once per bucket, not per leaf; 0 = legacy per-leaf
         self.buckets = int(cfg.buckets if buckets is None else buckets)
+        # bucket padding granularity (autotuner knob; None = kernel BLOCK)
+        self.plan_block = None if plan_block is None else int(plan_block)
         self._plan_cache: dict = {}
 
     def _plan(self, params: PyTree):
         from repro.parallel import buckets as B
-        return B.cached_plan(self._plan_cache, params, self.buckets)
+        return B.cached_plan(self._plan_cache, params, self.buckets,
+                             block=self.plan_block,
+                             wire_dtype=getattr(self.reducer, "comm_dtype",
+                                                None))
 
     @property
     def _reducer_stateless(self) -> bool:

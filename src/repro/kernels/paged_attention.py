@@ -33,21 +33,17 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, page_size: int, n_pages: int):
-    b = pl.program_id(0)
-    j = pl.program_id(2)
+def _fold_page(b, j, q, k, v, len_ref, o_ref, m_ref, l_ref, acc_ref,
+               *, page_size: int, n_pages: int):
+    """Fold one f32 (page_size, hd) k/v page into the online-softmax
+    scratch state; write the output tile at the final page."""
+    hd = q.shape[-1]
 
     @pl.when(j == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)
-    hd = q.shape[-1]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
@@ -70,8 +66,36 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
 
 
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, page_size: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    _fold_page(b, j, q, k, v, len_ref, o_ref, m_ref, l_ref, acc_ref,
+               page_size=page_size, n_pages=n_pages)
+
+
+def _paged_kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        page_size: int, n_pages: int):
+    """The quantized-page variant: each grid step also DMAs the page's
+    f32 per-token scales ``(1, page_size)`` and dequantizes k/v right
+    after the page DMA — the softmax math downstream is identical f32."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ks_ref[0][:, None]
+    v = v_ref[0, :, 0].astype(jnp.float32) * vs_ref[0][:, None]
+    _fold_page(b, j, q, k, v, len_ref, o_ref, m_ref, l_ref, acc_ref,
+               page_size=page_size, n_pages=n_pages)
+
+
 def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
                     block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                    k_scale: Optional[jnp.ndarray] = None,
+                    v_scale: Optional[jnp.ndarray] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, KV, G, hd); k_pool/v_pool: (num_pages, page_size, KV, hd);
     block_tables: (B, max_pages) int32; lengths: (B,) int32 valid
@@ -80,9 +104,19 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
     Semantics = `repro.kernels.ref.paged_attention_ref`: attend over the
     logical linearization of each row's block table, masking positions
     ``>= lengths[b]`` (rows must have ``lengths >= 1``).
+
+    With ``k_scale``/``v_scale`` (``(num_pages, page_size)`` f32 — the
+    per-token scales of int8/fp8 quantized pools,
+    `repro.models.cache.PagedLayout` with ``kv_dtype``), each grid step
+    additionally DMAs the page's scale row and dequantizes inside the
+    kernel — the online-softmax state never sees the storage dtype.
+    Note TPU int8 tiling wants ``page_size >= 32``; smaller pages fall
+    back to relayouts (correct, slower).
     """
     from jax.experimental.pallas import tpu as pltpu
 
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale or neither")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     B, KV, G, hd = q.shape
@@ -91,17 +125,27 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
 
     # (B, KV, G, hd) -> grid (B, KV, mp); pools keep their pool layout and
     # are indexed per grid step through the prefetched block table
+    pool_spec = pl.BlockSpec((1, page_size, 1, hd),
+                             lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, h, j, bt, ln: (b, h, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    kernel_fn = _paged_kernel
+    if k_scale is not None:
+        scale_spec = pl.BlockSpec((1, page_size),
+                                  lambda b, h, j, bt, ln: (bt[b, j], 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+        kernel_fn = _paged_kernel_quant
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, mp),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, h, j, bt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ln: (bt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, j, bt, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -110,7 +154,7 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
             pltpu.VMEM((G, hd), jnp.float32),
         ],
     )
-    kernel = functools.partial(_paged_kernel, page_size=page_size,
+    kernel = functools.partial(kernel_fn, page_size=page_size,
                                n_pages=mp)
     return pl.pallas_call(
         kernel,
@@ -118,4 +162,4 @@ def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pool, v_pool)
+      *operands)

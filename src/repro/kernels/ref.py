@@ -78,8 +78,8 @@ def decode_attention_ref(q, k, v, valid_len) -> jnp.ndarray:
     return jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
 
 
-def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths
-                        ) -> jnp.ndarray:
+def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths,
+                        k_scale=None, v_scale=None) -> jnp.ndarray:
     """One-token GQA decode attention over a PAGED KV cache.
 
     q: (B, KV, G, hd); k_pool/v_pool: (num_pages, page_size, KV, hd) —
@@ -87,6 +87,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths
     page ids in logical order; lengths: (B,) int32 valid positions per
     row (logical position p of row b lives at
     ``(block_tables[b, p // page_size], p % page_size)``).
+
+    ``k_scale``/``v_scale`` (optional, (num_pages, page_size) f32) are
+    the per-token scales of quantized int8/fp8 pools: the linearized
+    view is dequantized (``value.astype(f32) * scale``) before the
+    attention math, matching the kernel's in-DMA dequant.
 
     Returns (B, KV, G, hd) f32.  Semantics: gather each row's pages into
     logical order, mask positions >= lengths[b], softmax-attend — i.e.
@@ -96,6 +101,11 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, lengths
     ps = k_pool.shape[1]
     k_lin = k_pool[block_tables].reshape(B, mp * ps, *k_pool.shape[2:])
     v_lin = v_pool[block_tables].reshape(B, mp * ps, *v_pool.shape[2:])
+    if k_scale is not None:
+        ks = k_scale[block_tables].reshape(B, mp * ps)
+        vs = v_scale[block_tables].reshape(B, mp * ps)
+        k_lin = k_lin.astype(jnp.float32) * ks[:, :, None, None]
+        v_lin = v_lin.astype(jnp.float32) * vs[:, :, None, None]
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
                    k_lin.astype(jnp.float32)) * scale

@@ -142,7 +142,8 @@ def run_scheduler(model, params, reqs, args, arrivals=None) -> None:
                     seed=args.seed, use_kernel=args.paged_kernel,
                     decode_burst=args.decode_burst,
                     prefill_chunk=args.prefill_chunk,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache,
+                    kv_dtype=args.kv_dtype)
     t0 = time.time()
     done = sch.run(reqs, arrivals=arrivals)
     wall = time.time() - t0
@@ -190,6 +191,12 @@ def main(argv=None):
                     help="KV page pool size")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("bfloat16", "float32", "int8", "fp8"),
+                    help="storage dtype of the paged KV pools (default: "
+                         "compute dtype); int8/fp8 quantize per token "
+                         "slot with f32 scales stored alongside the "
+                         "pages — roughly 4x users per pool vs f32")
     ap.add_argument("--paged-kernel", action="store_true",
                     help="Pallas paged-attention decode kernel (interpret "
                          "mode on CPU) instead of the XLA gather")
@@ -205,6 +212,13 @@ def main(argv=None):
                     help="share committed prompt-prefix pages between "
                          "requests (copy-on-write on divergence; implies "
                          "chunked prefill, default chunk 4*page_size)")
+    ap.add_argument("--tuned-config", type=Path, default=None,
+                    help="autotuner config blob (repro.analysis.autotune): "
+                         "its serve.tuned {page_size, decode_burst} "
+                         "override the flag defaults")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the serve-side autotuner probe first and "
+                         "adopt its tuned config")
     ap.add_argument("--train-ckpt", type=Path, default=None,
                     help="serve eval_params of a training checkpoint "
                          "(metadata selects the algorithm)")
@@ -234,6 +248,23 @@ def main(argv=None):
               f"(algo={resolved['algo']}, eval_params)")
     else:
         params = model.init(key)
+
+    # tuned config (repro.analysis.autotune) — applies to the paged
+    # scheduler modes; the pool size in pages stays the flag's, so a
+    # bigger tuned page_size means a bigger pool in tokens
+    tuned = None
+    if args.autotune:
+        from repro.analysis.autotune import autotune
+        tuned = autotune(smoke=True, skip_train=True,
+                         kv_dtype=args.kv_dtype)["serve"]["tuned"]
+    elif args.tuned_config is not None:
+        from repro.analysis.autotune import load_tuned
+        tuned = load_tuned(args.tuned_config).get("serve", {}).get("tuned")
+    if tuned:
+        args.page_size = int(tuned["page_size"])
+        args.decode_burst = int(tuned["decode_burst"])
+        print(f"[serve] autotuned: page_size={args.page_size} "
+              f"decode_burst={args.decode_burst}")
 
     if args.requests is not None:
         reqs = load_requests(args.requests, cfg.vocab_size, args.gen,

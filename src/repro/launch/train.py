@@ -58,6 +58,12 @@ def build_argparser():
                          "topk/randk")
     ap.add_argument("--compress-rank", type=int, default=4,
                     help="low-rank factor width for --reducer powersgd")
+    ap.add_argument("--comm-dtype", default="float32",
+                    choices=["float32", "bfloat16", "float16", "int8",
+                             "fp8"],
+                    help="wire dtype for the reducer payload (int8/fp8 "
+                         "= quantized with one f32 scale per bucket "
+                         "row; error feedback absorbs the error)")
     ap.add_argument("--local-optimizer", default=None,
                     choices=registry.names(registry.LOCAL_OPTIMIZER),
                     help="override cfg.local_optimizer")
@@ -118,6 +124,13 @@ def build_argparser():
                          "(repro.parallel.pipeline): issue each step's "
                          "reduce at the tail, consume it at the next "
                          "step's head; needs --buckets > 0")
+    ap.add_argument("--tuned-config", type=Path, default=None,
+                    help="autotuner config blob (repro.analysis.autotune): "
+                         "its train.tuned {buckets, plan_block} override "
+                         "the flag defaults")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the train-side autotuner probe first and "
+                         "adopt its tuned config (a few extra minutes)")
     ap.add_argument("--dense-after-join", type=int, default=0,
                     help="run this many steps on the dense wire after an "
                          "elastic join before re-enabling a compressed "
@@ -176,7 +189,25 @@ def run(args) -> dict:
         gossip_neighbors=args.gossip_neighbors,
         compress_density=args.compress_density,
         compress_rank=args.compress_rank,
+        comm_dtype=args.comm_dtype,
     )
+
+    # tuned config (repro.analysis.autotune): --tuned-config reads a
+    # blob, --autotune probes inline; either way train.tuned overrides
+    # the bucket layout flags
+    plan_block = None
+    tuned = None
+    if getattr(args, "autotune", False):
+        from repro.analysis.autotune import autotune
+        tuned = autotune(smoke=True, skip_serve=True)["train"]["tuned"]
+    elif getattr(args, "tuned_config", None) is not None:
+        from repro.analysis.autotune import load_tuned
+        tuned = load_tuned(args.tuned_config).get("train", {}).get("tuned")
+    if tuned:
+        args.buckets = int(tuned["buckets"])
+        plan_block = tuned.get("plan_block")
+        print(f"[train] autotuned: buckets={args.buckets} "
+              f"plan_block={plan_block}")
 
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -187,7 +218,7 @@ def run(args) -> dict:
     alg = registry.make(args.algo, dc_cfg, n_workers=args.workers,
                         reducer=reducer, staleness=args.staleness,
                         use_kernels=args.use_kernels, buckets=args.buckets,
-                        overlap=args.overlap)
+                        overlap=args.overlap, plan_block=plan_block)
     engine = Engine(model, alg)
     state = alg.init(params)
 

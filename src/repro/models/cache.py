@@ -57,11 +57,22 @@ from typing import Any, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as Q
 from repro.core.types import ModelConfig
 
 PyTree = Any
 
 SCRATCH_PAGE = 0  # physical page inactive slots write into; never read
+
+
+def _quantize_tokens(x: jnp.ndarray, kv_dtype: str, lead: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token-slot symmetric quantization for a page write: the first
+    ``lead`` axes of ``x`` index token slots, everything after is the
+    feature payload one token occupies — one f32 scale per slot, values
+    in the storage dtype.  Returns (values, scales with the slot shape)."""
+    qv, sc = Q.quantize(x, kv_dtype, axes=tuple(range(lead, x.ndim)))
+    return qv, sc.reshape(x.shape[:lead])
 
 
 def resolved_window(cfg: ModelConfig, kind: str) -> int:
@@ -142,6 +153,24 @@ class _PagedOps:
             return attend_one(qg, k_c, v_c, valid), {"k": k_c, "v": v_c}
         ps = self.layout.page_size
         phys, off = self.bt[rows, pos // ps], pos % ps
+        if self.layout.kv_quantized:
+            kv_dt = self.layout.kv_dtype
+            kq, ksc = _quantize_tokens(k_new[:, 0], kv_dt, 1)
+            vq, vsc = _quantize_tokens(v_new[:, 0], kv_dt, 1)
+            k_p = cache["k"].at[phys, off].set(kq)
+            v_p = cache["v"].at[phys, off].set(vq)
+            ks_p = cache["k_scale"].at[phys, off].set(ksc)
+            vs_p = cache["v_scale"].at[phys, off].set(vsc)
+            new_cache = {"k": k_p, "v": v_p,
+                         "k_scale": ks_p, "v_scale": vs_p}
+            if self.layout.use_kernel:
+                from repro.kernels.paged_attention import paged_attention
+                out = paged_attention(qg, k_p, v_p, self.bt, pos + 1,
+                                      k_scale=ks_p, v_scale=vs_p)
+                return out, new_cache
+            k_lin, valid = self._linearize(k_p, ks_p)
+            v_lin, _ = self._linearize(v_p, vs_p)
+            return attend_one(qg, k_lin, v_lin, valid), new_cache
         k_p = cache["k"].at[phys, off].set(
             k_new[:, 0].astype(cache["k"].dtype))
         v_p = cache["v"].at[phys, off].set(
@@ -162,6 +191,18 @@ class _PagedOps:
         rows = jnp.arange(ckv_t.shape[0])
         ps = self.layout.page_size
         phys, off = self.bt[rows, pos // ps], pos % ps
+        if self.layout.kv_quantized:
+            kv_dt = self.layout.kv_dtype
+            cq, csc = _quantize_tokens(ckv_t, kv_dt, 1)
+            rq, rsc = _quantize_tokens(k_rope_t, kv_dt, 1)
+            ckv_p = cache["ckv"].at[phys, off].set(cq)
+            kr_p = cache["k_rope"].at[phys, off].set(rq)
+            cs_p = cache["ckv_scale"].at[phys, off].set(csc)
+            rs_p = cache["k_rope_scale"].at[phys, off].set(rsc)
+            ckv, valid = self._linearize(ckv_p, cs_p)
+            kr, _ = self._linearize(kr_p, rs_p)
+            return ckv, kr, valid, {"ckv": ckv_p, "k_rope": kr_p,
+                                    "ckv_scale": cs_p, "k_rope_scale": rs_p}
         ckv_p = cache["ckv"].at[phys, off].set(
             ckv_t.astype(cache["ckv"].dtype))
         kr_p = cache["k_rope"].at[phys, off].set(
@@ -170,12 +211,20 @@ class _PagedOps:
         kr, _ = self._linearize(kr_p)
         return ckv, kr, valid, {"ckv": ckv_p, "k_rope": kr_p}
 
-    def _linearize(self, pool: jnp.ndarray):
+    def _linearize(self, pool: jnp.ndarray, scale: Optional[jnp.ndarray]
+                   = None):
         """Gather a slot's pages into logical order: (B, max_pages ·
-        page_size, ...) — the paged view of the dense cache."""
+        page_size, ...) — the paged view of the dense cache.  With
+        ``scale`` (the pool's per-token f32 scales), the view is
+        dequantized to f32 so the attention math downstream never sees
+        the storage dtype."""
         B, mp = self.bt.shape
         ps = self.layout.page_size
         lin = pool[self.bt].reshape(B, mp * ps, *pool.shape[2:])
+        if scale is not None:
+            s_lin = scale[self.bt].reshape(B, mp * ps)
+            lin = lin.astype(jnp.float32) * s_lin.reshape(
+                s_lin.shape + (1,) * (lin.ndim - 2))
         valid = jnp.arange(mp * ps)[None, :] <= self.pos[:, None]
         return lin, valid
 
@@ -221,23 +270,43 @@ class _ChunkOps:
         ps = self.layout.page_size
         return pool[self.bt].reshape(B, mp * ps, *pool.shape[2:])
 
+    def _store(self, cache: dict, name: str, new: jnp.ndarray) -> dict:
+        """Scatter ``new`` (B, L, ...) into pool ``name`` — quantized
+        writes land values + per-token scales, dense writes just cast."""
+        if self.layout.kv_quantized:
+            qv, sc = _quantize_tokens(new, self.layout.kv_dtype, 2)
+            return {name: self._scatter(cache[name], qv),
+                    f"{name}_scale": self._scatter(cache[f"{name}_scale"],
+                                                   sc)}
+        return {name: self._scatter(cache[name], new)}
+
+    def _view(self, cache: dict, name: str) -> jnp.ndarray:
+        """The linearized (dequantized when pages are quantized) view."""
+        lin = self._linearize(cache[name])
+        if self.layout.kv_quantized:
+            s = self._linearize(cache[f"{name}_scale"])      # (B, mp·ps)
+            lin = lin.astype(jnp.float32) * s.reshape(
+                s.shape + (1,) * (lin.ndim - 2))
+        return lin
+
     def kv_prefill_attend(self, cache: dict, qg, k_new, v_new, positions):
         from repro.models.attention import _blocked_attention
-        k_p = self._scatter(cache["k"], k_new)
-        v_p = self._scatter(cache["v"], v_new)
-        k_lin = self._linearize(k_p)
-        v_lin = self._linearize(v_p)
+        new = dict(cache)
+        new.update(self._store(cache, "k", k_new))
+        new.update(self._store(cache, "v", v_new))
+        k_lin = self._view(new, "k")
+        v_lin = self._view(new, "v")
         out = _blocked_attention(
             qg, k_lin, v_lin, positions, jnp.arange(k_lin.shape[1]),
             causal=True, window=0, q_chunk=qg.shape[1],
             kv_chunk=self.layout.page_size)
-        return out, {"k": k_p, "v": v_p}
+        return out, new
 
     def mla_prefill(self, cache: dict, ckv, k_rope):
-        ckv_p = self._scatter(cache["ckv"], ckv)
-        kr_p = self._scatter(cache["k_rope"], k_rope)
-        return (self._linearize(ckv_p), self._linearize(kr_p),
-                {"ckv": ckv_p, "k_rope": kr_p})
+        new = dict(cache)
+        new.update(self._store(cache, "ckv", ckv))
+        new.update(self._store(cache, "k_rope", k_rope))
+        return (self._view(new, "ckv"), self._view(new, "k_rope"), new)
 
 
 class PagedLayout:
@@ -245,19 +314,36 @@ class PagedLayout:
 
     ``n_slots`` — decode batch rows (one active request per slot);
     ``num_pages`` × ``page_size`` — the shared pool (page 0 = scratch);
-    ``max_pages`` — block-table width = max sequence pages per slot.
+    ``max_pages`` — block-table width = max sequence pages per slot;
+    ``kv_dtype`` — storage dtype of the paged pools: None/"auto" keeps
+    the compute dtype, a float name overrides it, ``int8``/``fp8``
+    quantizes every page write per token slot with an f32 scale stored
+    in a sibling ``*_scale`` pool ``(num_pages, page_size)`` — reads
+    dequantize inside the page gather (or the Pallas kernel's page DMA)
+    so attention math stays f32, and `kv_bytes_per_token` /
+    `page_bytes` make capacity planning bytes-aware.
     """
 
     kind = "paged"
 
     def __init__(self, model, *, n_slots: int, num_pages: int,
-                 page_size: int, max_pages: int, use_kernel: bool = False):
+                 page_size: int, max_pages: int, use_kernel: bool = False,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.n_slots = int(n_slots)
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.max_pages = int(max_pages)
         self.use_kernel = bool(use_kernel)
+        # storage dtype of the PAGED pools only (rings / SSM / RG-LRU
+        # states stay at compute dtype — they are O(window)/O(1), the
+        # bytes that cap users per pool are the paged ones).  int8/fp8
+        # adds one f32 scale per (pool, token slot) next to each pool;
+        # a plain float name just overrides the pool dtype.
+        self.kv_dtype = None if kv_dtype in (None, "auto") \
+            else Q.canonical(kv_dtype)
+        self.kv_quantized = Q.is_quantized(self.kv_dtype) \
+            if self.kv_dtype is not None else False
         cfg = model.cfg
         self.ring_max = max([resolved_window(cfg, k)
                              for st in model.stages for k in st.kinds]
@@ -287,6 +373,48 @@ class PagedLayout:
         return -(-max(int(n_tokens), 1) // self.page_size) \
             if self.uses_pages else 0
 
+    def _pool_dtype(self, dtype):
+        """Storage dtype of the paged pools (``dtype`` = compute dtype)."""
+        if self.kv_dtype is None:
+            return dtype
+        if self.kv_quantized:
+            return Q.qinfo(self.kv_dtype)[0]
+        return jnp.dtype(self.kv_dtype)
+
+    def kv_bytes_per_token(self) -> int:
+        """Pool bytes one committed token slot occupies across every
+        paged layer: feature payload at the storage dtype plus one f32
+        scale per (pool, slot) when quantized.  The denominator of the
+        users-per-pool math (`docs/serve.md`)."""
+        cfg = self.model.cfg
+        if self.kv_quantized:
+            it = 1
+        else:
+            it = jnp.dtype(self.kv_dtype if self.kv_dtype is not None
+                           else self.model.compute_dtype).itemsize
+        sb = Q.SCALE_BYTES if self.kv_quantized else 0
+        total = 0
+        for stage in self.model.stages:
+            per = 0
+            for kind in paged_kinds(cfg, stage.kinds):
+                if kind == "mla":
+                    feats = [cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim]
+                else:  # k and v pools
+                    feats = [cfg.eff_n_kv_heads
+                             * cfg.resolved_head_dim] * 2
+                per += sum(f * it + sb for f in feats)
+            total += per * stage.repeats
+        return total
+
+    def page_bytes(self) -> int:
+        """Pool bytes one physical page pins across every paged layer."""
+        return self.kv_bytes_per_token() * self.page_size
+
+    @property
+    def kv_dtype_name(self) -> str:
+        return self.kv_dtype if self.kv_dtype is not None \
+            else str(jnp.dtype(self.model.compute_dtype))
+
     # -- cache init ---------------------------------------------------------
 
     def init_cache(self, dtype=None) -> PyTree:
@@ -306,13 +434,18 @@ class PagedLayout:
         from repro.models import ssm as ssm_mod
         cfg = self.model.cfg
         window = resolved_window(cfg, kind)
+        pdt = self._pool_dtype(dtype)
+        scale = jnp.zeros((self.num_pages, self.page_size), jnp.float32)
         if kind in ("attention", "attention_local", "cross"):
             kv, hd = cfg.eff_n_kv_heads, cfg.resolved_head_dim
             if window > 0:  # slot-indexed ring — O(window), not paged
                 c = attn.init_kv_cache(self.n_slots, window, kv, hd, dtype)
             else:
-                z = jnp.zeros((self.num_pages, self.page_size, kv, hd), dtype)
+                z = jnp.zeros((self.num_pages, self.page_size, kv, hd), pdt)
                 c = {"k": z, "v": z}
+                if self.kv_quantized:
+                    c["k_scale"] = scale
+                    c["v_scale"] = scale
             if kind == "cross":
                 nf = cfg.encoder.n_frames
                 c["xk"] = jnp.zeros((self.n_slots, nf, cfg.eff_n_heads,
@@ -321,12 +454,16 @@ class PagedLayout:
             return c
         if kind == "mla":
             m = cfg.mla
-            return {
+            c = {
                 "ckv": jnp.zeros((self.num_pages, self.page_size,
-                                  m.kv_lora_rank), dtype),
+                                  m.kv_lora_rank), pdt),
                 "k_rope": jnp.zeros((self.num_pages, self.page_size,
-                                     m.qk_rope_head_dim), dtype),
+                                     m.qk_rope_head_dim), pdt),
             }
+            if self.kv_quantized:
+                c["ckv_scale"] = scale
+                c["k_rope_scale"] = scale
+            return c
         if kind == "mamba":
             return ssm_mod.init_mamba_state(self.n_slots, cfg.d_model,
                                             cfg.ssm, dtype)
@@ -372,25 +509,35 @@ class PagedLayout:
         ps = self.page_size
         k_grp, n_pg = pages.shape
 
-        def to_pool(pool, seq):  # seq: (R, k, cache_len, ...)
+        def to_pool(name, seq):  # seq: (R, k, cache_len, ...)
             seg = seq[:, :, :n_pg * ps]
             seg = seg.reshape(seq.shape[0], k_grp * n_pg, ps,
                               *seq.shape[3:])
-            return pool.at[:, pages.reshape(-1)].set(seg.astype(pool.dtype))
+            flat = pages.reshape(-1)
+            if self.kv_quantized:
+                qv, sc = _quantize_tokens(seg, self.kv_dtype, 3)
+                return {name: c[name].at[:, flat].set(qv),
+                        f"{name}_scale":
+                            c[f"{name}_scale"].at[:, flat].set(sc)}
+            return {name: c[name].at[:, flat].set(
+                seg.astype(c[name].dtype))}
 
         def to_slot(buf, seq):   # seq: (R, k, ...)
             return buf.at[:, slots].set(seq.astype(buf.dtype))
 
         if kind in ("attention", "attention_local", "cross"):
-            wr = to_slot if window > 0 else to_pool
-            out = {"k": wr(c["k"], e["k"]), "v": wr(c["v"], e["v"])}
+            if window > 0:
+                out = {"k": to_slot(c["k"], e["k"]),
+                       "v": to_slot(c["v"], e["v"])}
+            else:
+                out = {**to_pool("k", e["k"]), **to_pool("v", e["v"])}
             if kind == "cross":
                 out["xk"] = to_slot(c["xk"], e["xk"])
                 out["xv"] = to_slot(c["xv"], e["xv"])
             return out
         if kind == "mla":
-            return {"ckv": to_pool(c["ckv"], e["ckv"]),
-                    "k_rope": to_pool(c["k_rope"], e["k_rope"])}
+            return {**to_pool("ckv", e["ckv"]),
+                    **to_pool("k_rope", e["k_rope"])}
         if kind in ("mamba", "recurrent"):
             return {k: to_slot(c[k], e[k]) for k in c}
         raise ValueError(kind)

@@ -308,8 +308,12 @@ def _decode_block(kind: str, cfg: ModelConfig, p: dict, cache: dict, x, ctx):
         window = cfg.rglru.attention_window
     if kind in ("attention", "attention_local", "cross"):
         h = _norm(cfg, p["ln1"], x)
+        # the self-attention k/v pools plus their per-token scale pools
+        # when the paged layout quantizes pages (cross xk/xv stay out)
+        self_c = {kk: cache[kk] for kk in ("k", "v", "k_scale", "v_scale")
+                  if kk in cache}
         h, new_self = attn.attention_decode(
-            p["attn"], {"k": cache["k"], "v": cache["v"]}, h, pos,
+            p["attn"], self_c, h, pos,
             rope_theta=cfg.rope_theta, window=window, qk_norm=cfg.qk_norm,
             norm_eps=cfg.norm_eps,
             mrope_positions=ctx.get("mrope_positions"),

@@ -148,15 +148,22 @@ class BucketPlan:
 
 def cached_plan(cache: dict, tree: PyTree, n_buckets: int, *,
                 block: Optional[int] = None,
-                strip_leading_axis: bool = False) -> BucketPlan:
+                strip_leading_axis: bool = False,
+                wire_dtype: Optional[str] = None) -> BucketPlan:
     """Memoized `plan_buckets` keyed on the tree's (shape, dtype) layout —
     the per-algorithm plan cache (DCS3GD/SSGD carry one ``cache`` dict
     each; a step retrace with the same model reuses the plan).  ``block``
     is part of the key: plans with different alignment must not collide
-    (their padded bucket sizes differ)."""
+    (their padded bucket sizes differ).  ``wire_dtype`` (the reducer's
+    ``comm_dtype``) is part of the key for the same reason the PR-4
+    block-size fix made ``block`` one: a quantized wire and a dense wire
+    must never alias a plan, even if today's layouts happen to match —
+    a future dtype-dependent alignment choice would silently corrupt
+    whichever caller came second."""
     key = (tuple((tuple(x.shape), jnp.dtype(x.dtype).name)
                  for x in jax.tree.leaves(tree)),
-           n_buckets, block, strip_leading_axis)
+           n_buckets, block, strip_leading_axis,
+           None if wire_dtype is None else str(wire_dtype))
     if key not in cache:
         cache[key] = plan_buckets(tree, n_buckets, block=block,
                                   strip_leading_axis=strip_leading_axis)

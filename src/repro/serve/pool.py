@@ -39,12 +39,17 @@ class PagePool:
     """Refcounted free-list allocator over ``num_pages`` pages of
     ``page_size`` token slots each."""
 
-    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1):
+    def __init__(self, num_pages: int, page_size: int, *, reserved: int = 1,
+                 bytes_per_page: int = 0):
         if num_pages <= reserved:
             raise ValueError(f"pool needs > {reserved} pages, got {num_pages}")
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.reserved = int(reserved)
+        # device bytes one page pins across every paged pool (values +
+        # per-token scales when quantized) — 0 when the caller doesn't
+        # track bytes; makes `stats` bytes-aware
+        self.bytes_per_page = int(bytes_per_page)
         # LIFO free list: recently freed pages are reused first (their
         # pool rows are warm)
         self._free: List[int] = list(range(num_pages - 1, reserved - 1, -1))
@@ -137,6 +142,11 @@ class PagePool:
             "utilization": self.used_pages / max(self.num_pages
                                                  - self.reserved, 1),
         }
+        if self.bytes_per_page:
+            out["page_bytes"] = self.bytes_per_page
+            out["pool_bytes"] = ((self.num_pages - self.reserved)
+                                 * self.bytes_per_page)
+            out["used_bytes"] = self.used_pages * self.bytes_per_page
         if used_tokens is not None:
             alloc_tokens = self.used_pages * self.page_size
             out["used_tokens"] = int(used_tokens)

@@ -103,7 +103,8 @@ class Scheduler:
                  eos_id: Optional[int] = None, seed: int = 0,
                  use_kernel: bool = False, donate: bool = True,
                  decode_burst: int = 1, prefill_chunk: int = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 kv_dtype: Optional[str] = None):
         self.model = model
         self.params = params
         self.sampler = resolve_sampler(sampler, temperature)
@@ -128,7 +129,7 @@ class Scheduler:
                 f"never be admitted")
         self.layout = PagedLayout(model, n_slots=slots, num_pages=pages,
                                   page_size=page_size, max_pages=max_pages,
-                                  use_kernel=use_kernel)
+                                  use_kernel=use_kernel, kv_dtype=kv_dtype)
         # prefix caching rides on chunked prefill: all prompts (cold
         # included) must run the SAME chunk executable for a prefix hit
         # to be bitwise the cold prefill (docs/serve.md)
@@ -141,7 +142,10 @@ class Scheduler:
                 "every cache kind paged (full attention / MLA) and "
                 "per-token FFN math — ring, SSM and RG-LRU states are "
                 "slot-indexed and can't resume mid-prompt")
-        self.pool = PagePool(pages, page_size, reserved=1)
+        self.pool = PagePool(
+            pages, page_size, reserved=1,
+            bytes_per_page=self.layout.page_bytes()
+            if self.layout.uses_pages else 0)
         self.prefix = PrefixCache(self.pool, page_size) \
             if prefix_cache else None
         self.cache = self.layout.init_cache()
@@ -616,6 +620,13 @@ class Scheduler:
             # the number prefix sharing is supposed to cut
             out["cache_tokens_allocated"] = \
                 self.pool.total_allocs * self.layout.page_size
+            # bytes-aware capacity: what one token costs in pool bytes
+            # and how many full-length users the pool can hold at once
+            out["kv_dtype"] = self.layout.kv_dtype_name
+            out["kv_bytes_per_token"] = self.layout.kv_bytes_per_token()
+            out["users_per_pool"] = (
+                (self.pool.num_pages - self.pool.reserved)
+                // max(self.layout.pages_for(self.layout.max_len), 1))
         if self.prefix is not None:
             for k, v in self.prefix.stats().items():
                 out[f"prefix_{k}"] = v
